@@ -1,0 +1,66 @@
+"""MoE EP dispatch: collective bytes + wall time of the three impls
+(dense oracle / psum-EP / all_to_all-EP) on an 8-device host mesh."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+BODY = """
+import os, time, dataclasses
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.configs import get_config
+from repro.core.types import MeshConfig, ParallelismConfig
+from repro.model.layers import Ctx, init_params
+from repro.model.moe import moe_schema, moe_dense, moe_psum, moe_a2a
+from repro.energy.roofline import parse_collectives
+
+cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=2.0))
+mcfg = MeshConfig((2, 4), ("data", "model"))
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+par = ParallelismConfig(compute_dtype="float32")
+schema = moe_schema(cfg, tp=4)
+params = init_params(schema, jax.random.PRNGKey(0))
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 64, cfg.d_model))
+ctx = Ctx(cfg=cfg, mesh_cfg=mcfg, mode="train", mesh=mesh, par=par)
+
+for name, fn in [("dense", moe_dense), ("psum", moe_psum), ("a2a", moe_a2a)]:
+    with mesh:
+        f = jax.jit(lambda p, xx: fn(p, xx, cfg, ctx)[0])
+        c = f.lower(params, x).compile()
+        stc = parse_collectives(c.as_text(), 8)
+        out = f(params, x); jax.block_until_ready(out)
+        t0 = time.time()
+        for _ in range(5):
+            out = f(params, x)
+        jax.block_until_ready(out)
+        wt = (time.time() - t0) / 5
+    print(f"{name:>6}: wall={wt*1e3:7.1f} ms  wire_bytes={stc.total_wire_bytes:.3e}  counts={stc.counts}")
+"""
+
+
+def run() -> str:
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import sys
+        sys.path.insert(0, {ROOT + "/src"!r})
+    """) + BODY
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900)
+    print(r.stdout, end="")
+    if r.returncode != 0:
+        print(r.stderr, file=sys.stderr)
+        raise RuntimeError("moe_dispatch failed")
+    return r.stdout
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Assemble the §Roofline table from the dry-run's per-cell JSON outputs."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+HW = {"peak": 197e12, "hbm": 819e9, "link": 50e9}
+
+
+def load(dir_: str):
+    rows = []
+    for p in sorted(pathlib.Path(dir_).glob("*.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def render(rows, mesh_filter=None) -> str:
+    out = [f"{'arch':>18} {'shape':>11} {'mesh':>8} {'comp_ms':>8} "
+           f"{'mem_ms':>8} {'coll_ms':>8} {'bottleneck':>10} "
+           f"{'useful':>6} {'MFU':>6}  note"]
+    for r in rows:
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        note = ""
+        if r.get("collectives_in_while"):
+            note = f"({r['collectives_in_while']} colls in while)"
+        out.append(
+            f"{r['arch']:>18} {r['shape']:>11} {r['mesh']:>8} "
+            f"{r['compute_s']*1e3:8.2f} {r['memory_s']*1e3:8.2f} "
+            f"{r['collective_s']*1e3:8.2f} {r['bottleneck']:>10} "
+            f"{r['useful_ratio']:6.2f} {r['mfu']*100:5.1f}%  {note}")
+    return "\n".join(out)
+
+
+def run(dir_: str = "experiments/dryrun") -> str:
+    rows = load(dir_)
+    if not rows:
+        print(f"(no dry-run JSON under {dir_} — run repro.launch.dryrun "
+              f"--all --json {dir_})")
+        return ""
+    txt = render(rows)
+    print(txt)
+    return txt
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")

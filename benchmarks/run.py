@@ -1,0 +1,102 @@
+"""Benchmark harness — one entry per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV lines at the end (harness contract).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _timeit(fn, *args, n=3):
+    t0 = time.time()
+    for _ in range(n):
+        fn(*args)
+    return (time.time() - t0) / n * 1e6
+
+
+def main() -> None:
+    rows = []
+
+    print("=" * 72)
+    print("Table I reproduction (paper's only quantitative table)")
+    print("=" * 72)
+    from benchmarks import table1_energy
+
+    t1 = table1_energy.run()
+    rows.append(("table1_lstm_inference", t1["cpu_us"],
+                 f"est_vs_meas_latency_err={t1['lat_err']:+.1%}"))
+
+    print()
+    print("=" * 72)
+    print("RTL-template vs HLS analogue (Pallas templates vs plain XLA)")
+    print("=" * 72)
+    from benchmarks import rtl_vs_hls
+
+    rv = rtl_vs_hls.run()
+    rows.append(("attention_template_est_speedup", 0.0,
+                 f"x{rv['attention']['speedup_est']:.2f}"))
+    rows.append(("quant_matmul_wall_f32", rv["quant_matmul"]["wall_f32"] * 1e6,
+                 f"int8_wall={rv['quant_matmul']['wall_int8']*1e6:.0f}us"))
+    rows.append(("wkv6_chunked_wall", rv["wkv"]["chunked_ms"] * 1e3,
+                 f"x{rv['wkv']['speedup']:.1f}_vs_scan"))
+
+    print()
+    print("=" * 72)
+    print("MoE EP dispatch (8-device host mesh)")
+    print("=" * 72)
+    from benchmarks import moe_dispatch
+
+    moe_dispatch.run()
+    rows.append(("moe_dispatch", 0.0, "see table above"))
+
+    print()
+    print("=" * 72)
+    print("Data pipeline + trainer step (smoke scale)")
+    print("=" * 72)
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.types import SMOKE_MESH, ParallelismConfig, ShapeConfig
+    from repro.data.pipeline import LMDataConfig, lm_batch_for_step
+    from repro.model.lm import Stepper
+
+    cfg = get_config("yi-9b", smoke=True)
+    par = ParallelismConfig(compute_dtype="float32")
+    st = Stepper(cfg, ShapeConfig("t", "train", 64, 8), SMOKE_MESH, par)
+    params, opt = st.init()
+    dcfg = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    data_us = _timeit(lambda: lm_batch_for_step(dcfg, 0), n=5)
+    step = jax.jit(st.train_fn())
+    b = {k: jax.numpy.asarray(v) for k, v in lm_batch_for_step(dcfg, 0).items()}
+    params, opt, m = step(params, opt, b)   # compile
+    jax.block_until_ready(m["loss"])
+
+    state = {"p": params, "o": opt}
+
+    def one():
+        state["p"], state["o"], mm = step(state["p"], state["o"], b)
+        jax.block_until_ready(mm["loss"])
+
+    step_us = _timeit(one, n=5)
+    print(f"data batch gen: {data_us:.0f} us;  smoke train step: "
+          f"{step_us:.0f} us")
+    rows.append(("data_batch_gen", data_us, ""))
+    rows.append(("smoke_train_step", step_us, ""))
+
+    print()
+    print("=" * 72)
+    print("Roofline table (from dry-run artifacts, if present)")
+    print("=" * 72)
+    from benchmarks import roofline_table
+
+    roofline_table.run()
+
+    print()
+    print("name,us_per_call,derived")
+    for n, us, d in rows:
+        print(f"{n},{us:.1f},{d}")
+
+
+if __name__ == "__main__":
+    main()

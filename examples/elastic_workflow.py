@@ -1,0 +1,99 @@
+"""The paper's demo, as a script: the full ElasticAI-Workflow on the
+traffic-flow LSTM — design/QAT-train -> translate+estimate -> deploy+measure,
+with the feedback loop widening the fixed-point format until the requirement
+is met (what the PerCom audience would do interactively).
+
+    PYTHONPATH=src python examples/elastic_workflow.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.creator import Creator
+from repro.core.report import DesignReport
+from repro.core.workflow import Requirement, Workflow
+from repro.data.pipeline import TrafficConfig, traffic_flow_batch
+from repro.model.layers import init_params
+from repro.model.lstm import lstm_flops, lstm_schema
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.quant.fixedpoint import FxpFormat
+from repro.quant.qat import QATConfig, make_qat_loss, make_qat_lstm_apply
+
+
+def train_fn(knobs):
+    cfg = get_config("elastic-lstm")
+    qcfg = QATConfig(weight_fmt=FxpFormat(knobs["bits"], knobs["frac"]),
+                     act_fmt=FxpFormat(knobs["bits"],
+                                       max(0, knobs["frac"] - 2)),
+                     hard_activations=knobs.get("hard_act", True))
+    params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    loss_fn = make_qat_loss(cfg, qcfg)
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=150,
+                      weight_decay=0.0)
+    batch = {k: jnp.asarray(v) for k, v in
+             traffic_flow_batch(TrafficConfig(batch=256), 0).items()}
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(lambda pp: loss_fn(pp, batch)[0])(p)
+        p2, o2, _ = adamw_update(g, o, p, ocfg)
+        return p2, o2, loss
+
+    for i in range(120):
+        params, opt, loss = step(params, opt)
+    ev = traffic_flow_batch(TrafficConfig(batch=256, seed=9), 1)
+    apply = make_qat_lstm_apply(cfg, qcfg)
+    pred, _ = apply(params, jnp.asarray(ev["x"]))
+    eval_loss = float(jnp.mean((pred - jnp.asarray(ev["y"])) ** 2))
+    rep = DesignReport(model="elastic-lstm", train_loss=float(loss),
+                       eval_loss=eval_loss, params=2021,
+                       weight_fmt=str(qcfg.weight_fmt),
+                       act_fmt=str(qcfg.act_fmt))
+    return params, rep, apply
+
+
+def step_builder(knobs, params):
+    cfg = get_config("elastic-lstm")
+    qcfg = QATConfig(weight_fmt=FxpFormat(knobs["bits"], knobs["frac"]),
+                     act_fmt=FxpFormat(knobs["bits"],
+                                       max(0, knobs["frac"] - 2)))
+    apply = make_qat_lstm_apply(cfg, qcfg)
+    x = jnp.asarray(traffic_flow_batch(TrafficConfig(batch=1), 0)["x"])
+    return (lambda p, xx: apply(p, xx)[0]), (params, x), float(lstm_flops(cfg))
+
+
+def optimizer(history):
+    """The feedback rule a developer would apply after reading the reports:
+    eval loss too high -> widen the fixed-point format."""
+    k = dict(history[-1].knobs)
+    print(f"  [feedback] eval_loss={history[-1].design.eval_loss:.4f} "
+          f"with {history[-1].design.weight_fmt} -> widening")
+    if k["bits"] >= 16:
+        return None
+    k["bits"] += 4
+    k["frac"] += 3
+    return k
+
+
+def main():
+    wf = Workflow(creator=Creator(), train_fn=train_fn,
+                  step_builder=step_builder)
+    req = Requirement(max_eval_loss=0.01, max_latency_s=1.0)
+    hist = wf.run(req, optimizer, {"bits": 4, "frac": 2}, max_iters=4)
+    print(f"\n{'it':>3} {'fmt':>7} {'eval':>8} {'est_ms':>8} {'meas_ms':>8} "
+          f"{'est_uJ':>8} {'GOP/J':>7} {'ok':>3}")
+    for r in hist:
+        print(f"{r.iteration:>3} {r.design.weight_fmt:>7} "
+              f"{r.design.eval_loss:8.4f} "
+              f"{r.synthesis.est_latency_s*1e3:8.3f} "
+              f"{r.measurement.latency_s*1e3:8.3f} "
+              f"{r.synthesis.est_energy_j*1e6:8.2f} "
+              f"{r.measurement.gop_per_j:7.2f} "
+              f"{'Y' if r.satisfied else 'n':>3}")
+    print("\nworkflow finished:",
+          "requirement met" if hist[-1].satisfied else "budget exhausted")
+
+
+if __name__ == "__main__":
+    main()

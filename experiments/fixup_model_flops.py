@@ -1,0 +1,34 @@
+"""Recompute model_flops/useful/mfu in dry-run JSONs (post int32-overflow
+fix) without recompiling — flops/bytes/wire in the files are unaffected."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config
+from repro.core.types import SHAPES, SHAPES_LSTM
+from repro.launch.dryrun import model_flops_estimate
+
+PEAK = 197e12
+
+
+def main(d="experiments/dryrun"):
+    n = 0
+    for p in pathlib.Path(d).glob("*.json"):
+        r = json.loads(p.read_text())
+        cfg = get_config(r["arch"])
+        shapes = SHAPES_LSTM if cfg.family == "lstm" else SHAPES
+        mf = model_flops_estimate(cfg, shapes[r["shape"]])
+        total = r["flops_per_device"] * r["n_devices"]
+        r["model_flops"] = mf
+        r["useful_ratio"] = mf / total if total else 0.0
+        r["mfu"] = (mf / (r["n_devices"] * PEAK * r["step_s"])
+                    if r["step_s"] else 0.0)
+        p.write_text(json.dumps(r, indent=2))
+        n += 1
+    print(f"fixed {n} files")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")

@@ -1,0 +1,133 @@
+"""§Perf hillclimbing — hypothesis → change → re-lower → re-analyse.
+
+Runs named variants of the three selected cells and records the roofline
+terms before/after. The paper's feedback loop, applied to the 256-chip
+roofline instead of a 20-DSP FPGA.
+
+    PYTHONPATH=src python experiments/hillclimb.py --cell yi-9b:train_4k \
+        --variant gqa
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=512"
+    + " --xla_cpu_enable_concurrency_optimized_scheduler=false")
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.types import ParallelismConfig
+
+# ---------------------------------------------------------------------------
+# Flash-template analytic model (used by *flash variants): the Pallas
+# template's contribution, added onto the stub-lowered graph costs.
+# fwd flops = 2·B·S²·H·hd per self-attn (causal: half the S² rectangle, two
+# matmuls); bwd ≈ 2.5×; remat "full" runs fwd twice -> 4.5× total for train,
+# 1× for prefill/decode. HBM traffic = Q/K/V reads + O write per pass
+# (running softmax state lives in VMEM), grouped-KV aware.
+# ---------------------------------------------------------------------------
+
+
+def template_attn_cost(cfg, shape, n_devices, dp, tp, mode):
+    B = shape.global_batch
+    S = shape.seq_len if mode != "decode" else 1
+    Sk = shape.seq_len
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    B_loc = max(1, B // dp)
+    H_loc = max(1, H // tp) if H % tp == 0 else H
+    KV_loc = max(1, KV // tp) if KV % tp == 0 else KV
+    per_attn_fwd_flops = 2.0 * B_loc * S * Sk * H_loc * hd
+    mult = 4.5 if mode == "train" else 1.0
+    flops = cfg.n_layers * per_attn_fwd_flops * mult
+    passes = 3.0 if mode == "train" else 1.0   # fwd, remat-fwd, bwd streams
+    bytes_ = cfg.n_layers * passes * 2.0 * (
+        B_loc * S * H_loc * hd * 2      # Q read + O write
+        + 2 * B_loc * Sk * KV_loc * hd  # K,V reads (grouped: KV heads only)
+    )
+    return flops, bytes_
+
+
+VARIANTS = {
+    "baseline": dict(),
+    "gqa": dict(par=dict(gqa_grouped=True)),
+    "gqa+dots": dict(par=dict(gqa_grouped=True), cfg=dict(remat="dots")),
+    "gqa+flash": dict(par=dict(gqa_grouped=True, attn_impl="template_stub"),
+                      add_template_attn=True),
+    "flash": dict(par=dict(attn_impl="template_stub"),
+                  add_template_attn=True),
+    "compress": dict(par=dict(grad_compression=True)),
+    "gqa+compress": dict(par=dict(gqa_grouped=True, grad_compression=True)),
+    "dots": dict(cfg=dict(remat="dots")),
+    "noremat": dict(cfg=dict(remat="none")),
+    # embedding-gather + CE-accumulation fixes (see §Perf narrative)
+    "emb+fullce": dict(cfg=dict(embed_replicated=True, ce_chunked=False)),
+    "opt": dict(par=dict(gqa_grouped=True, attn_impl="template_stub"),
+                cfg=dict(embed_replicated=True, ce_chunked=False),
+                add_template_attn=True),
+    "opt+compress": dict(
+        par=dict(gqa_grouped=True, attn_impl="template_stub",
+                 grad_compression=True),
+        cfg=dict(embed_replicated=True, ce_chunked=False),
+        add_template_attn=True),
+    "gqa+emb+fullce": dict(par=dict(gqa_grouped=True),
+                           cfg=dict(embed_replicated=True, ce_chunked=False)),
+    # decode: seq-shard the (otherwise model-replicated) KV cache
+    "kvshard": dict(par=dict(gqa_grouped=True, seq_shard_decode=True)),
+}
+
+
+def run_variant(arch, shape_name, vname, json_dir="experiments/hillclimb"):
+    from repro.core.types import SHAPES
+    from repro.launch import dryrun as dr
+
+    spec = VARIANTS[vname]
+    par = ParallelismConfig(**spec.get("par", {}))
+    cfg_tr = ((lambda c: c.with_(**spec["cfg"])) if "cfg" in spec else None)
+    rep, dt = dr.lower_cell(arch, shape_name, multi_pod=False, par=par,
+                            mode="extrapolate", cfg_transform=cfg_tr)
+
+    if spec.get("add_template_attn"):
+        from repro.configs import get_config
+
+        cfg = get_config(arch)
+        if cfg_tr:
+            cfg = cfg_tr(cfg)
+        shape = SHAPES[shape_name]
+        f_t, b_t = template_attn_cost(cfg, shape, 256, dp=16, tp=16,
+                                      mode=shape.kind)
+        rep.flops_per_device += f_t
+        rep.bytes_per_device += b_t
+        rep.compute_s = rep.flops_per_device / 197e12
+        rep.memory_s = rep.bytes_per_device / 819e9
+        terms = {"compute": rep.compute_s, "memory": rep.memory_s,
+                 "collective": rep.collective_s}
+        rep.bottleneck = max(terms, key=terms.get)
+        rep.step_s = max(terms.values())
+        rep.mfu = rep.model_flops / (256 * 197e12 * rep.step_s)
+
+    p = pathlib.Path(json_dir)
+    p.mkdir(parents=True, exist_ok=True)
+    out = dr.report_json(rep, dt)
+    out["variant"] = vname
+    (p / f"{arch}__{shape_name}__{vname}.json").write_text(
+        json.dumps(out, indent=2))
+    print(f"[{vname}] comp={rep.compute_s*1e3:.1f}ms "
+          f"mem={rep.memory_s*1e3:.1f}ms coll={rep.collective_s*1e3:.1f}ms "
+          f"-> step={rep.step_s*1e3:.1f}ms bottleneck={rep.bottleneck} "
+          f"MFU={rep.mfu*100:.1f}%")
+    return rep
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", required=True,
+                    help=",".join(VARIANTS))
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    for v in args.variant.split(","):
+        run_variant(arch, shape, v)

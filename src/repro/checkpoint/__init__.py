@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (CheckpointManager, load_checkpoint,
+                                   save_checkpoint, latest_step)

@@ -1,0 +1,25 @@
+"""The paper's own accelerator workload: LSTM traffic-flow predictor.
+
+Sized to match Table I / ref [11]: hidden=20, window=6, univariate input —
+≈21.1 kOP per inference, matching the paper's 5.33 GOP/J at 71 mW / 57.25 µs
+(5.33e9 OP/J x 71e-3 W x 57.25e-6 s = 21.7 kOP).
+"""
+from repro.core.types import LSTMConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="elastic-lstm",
+        family="lstm",
+        n_layers=1,
+        d_model=20,
+        n_heads=1,
+        n_kv_heads=1,
+        d_ff=0,
+        vocab_size=0,
+        lstm=LSTMConfig(hidden=20, n_layers=1, in_features=1, out_features=1, seq_len=6),
+    )
+
+
+def smoke() -> ModelConfig:
+    return config()  # already tiny — the paper's scale IS smoke scale

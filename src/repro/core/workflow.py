@@ -1,0 +1,149 @@
+"""The ElasticAI-Workflow: three stages + feedback loop, as a first-class API.
+
+Stage 1  design/train/quantize (PyTorch in the paper; JAX here)
+Stage 2  translate + synthesize -> estimation reports
+Stage 3  deploy + measure (per-region channels) -> measurement reports
+
+"The optimization loop will not terminate until the developers are satisfied
+with the reports" — :meth:`Workflow.run` iterates candidate tweaks (provided
+by an ``optimizer`` callback) until the requirement predicate accepts the
+stage-3 measurement or the tweak budget is exhausted. This same loop, run
+manually against the roofline reports, is the §Perf hillclimbing methodology
+in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.creator import Creator
+from repro.core.report import (DesignReport, MeasurementReport,
+                               SynthesisReport, compare)
+from repro.core.types import ModelConfig, ShapeConfig, SMOKE_MESH
+from repro.energy.hw import HWSpec, TPU_V5E
+
+
+@dataclass
+class Requirement:
+    """What "the application requires" — the workflow's stop condition."""
+
+    max_latency_s: float = float("inf")
+    max_energy_j: float = float("inf")
+    min_gop_per_j: float = 0.0
+    max_eval_loss: float = float("inf")
+
+    def satisfied(self, d: DesignReport, m: MeasurementReport) -> bool:
+        return (m.latency_s <= self.max_latency_s
+                and m.energy_j <= self.max_energy_j
+                and m.gop_per_j >= self.min_gop_per_j
+                and d.eval_loss <= self.max_eval_loss)
+
+
+@dataclass
+class WorkflowRecord:
+    """One trip around the loop — design, estimate, measurement, verdict."""
+
+    iteration: int
+    knobs: Dict[str, Any]
+    design: DesignReport
+    synthesis: SynthesisReport
+    measurement: MeasurementReport
+    est_vs_meas: Dict[str, float]
+    satisfied: bool
+
+
+@dataclass
+class Workflow:
+    """Drives stage1/stage2/stage3 for one model family.
+
+    The user supplies three callables, mirroring how a DL developer plugs
+    their task into the ElasticAI toolchain:
+      train_fn(knobs)  -> (params, DesignReport, apply_fn)
+      step_builder(knobs, params) -> (fn, args, model_flops)   # deployable
+    """
+
+    creator: Creator
+    train_fn: Callable[[Dict[str, Any]], Tuple[Any, DesignReport, Any]]
+    step_builder: Callable[[Dict[str, Any], Any], Tuple[Any, tuple, float]]
+    stepper_builder: Optional[Callable[[Dict[str, Any]], Any]] = None
+    history: List[WorkflowRecord] = field(default_factory=list)
+
+    def run_once(self, knobs: Dict[str, Any], it: int = 0) -> WorkflowRecord:
+        # Stage 1 — design / train / quantize
+        params, design, _ = self.train_fn(knobs)
+        # Stage 2 — translate + estimate
+        if self.stepper_builder is not None:
+            st = self.stepper_builder(knobs)
+            syn, _ = self.creator.translate(st)
+        else:
+            fn, args, model_flops = self.step_builder(knobs, params)
+            syn = self._synth_from_fn(fn, args, model_flops)
+        # Stage 3 — deploy + measure
+        fn, args, model_flops = self.step_builder(knobs, params)
+        meas = self.creator.measure(jax.jit(fn), args,
+                                    model=design.model,
+                                    model_flops=model_flops)
+        rec = WorkflowRecord(
+            iteration=it, knobs=dict(knobs), design=design, synthesis=syn,
+            measurement=meas, est_vs_meas=compare(syn, meas),
+            satisfied=False)
+        self.history.append(rec)
+        return rec
+
+    def _synth_from_fn(self, fn, args, model_flops) -> SynthesisReport:
+        from repro.energy.meter import meter_channels
+        from repro.energy.roofline import roofline
+        import time
+
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args))
+        compiled = lowered.compile()
+        dt = time.time() - t0
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        hw = self.creator.hw
+        rep = roofline(arch="wf", shape="wf", mesh="1dev", n_devices=1,
+                       cost=cost, hlo_text=hlo, model_flops=model_flops,
+                       hw=hw)
+        ch = meter_channels(hlo, 1, hw)
+        est_latency = max(rep.step_s, 1e-12)
+        est_energy = ch.total_joules + hw.idle_w * est_latency
+        return SynthesisReport(
+            model="wf", target=hw.name,
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            fits=mem.temp_size_in_bytes <= hw.hbm_bytes,
+            utilization=mem.temp_size_in_bytes / hw.hbm_bytes,
+            flops=rep.flops_per_device,
+            bytes_accessed=rep.bytes_per_device,
+            wire_bytes=rep.wire_bytes_per_device,
+            est_latency_s=est_latency,
+            est_power_w=est_energy / est_latency,
+            est_energy_j=est_energy,
+            est_gop_per_j=(model_flops / 1e9) / est_energy if est_energy else 0,
+            bottleneck=rep.bottleneck, channels=ch.seconds,
+            channel_joules=ch.joules, compile_seconds=dt)
+
+    def run(self, requirement: Requirement,
+            optimizer: Callable[[List[WorkflowRecord]], Optional[Dict[str, Any]]],
+            initial_knobs: Dict[str, Any], max_iters: int = 8
+            ) -> List[WorkflowRecord]:
+        """The feedback loop: tweak → retrain → retranslate → remeasure."""
+        knobs = dict(initial_knobs)
+        for it in range(max_iters):
+            rec = self.run_once(knobs, it)
+            rec.satisfied = requirement.satisfied(rec.design, rec.measurement)
+            if rec.satisfied:
+                break
+            nxt = optimizer(self.history)
+            if nxt is None:
+                break
+            knobs = nxt
+        return self.history

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (LMDataConfig, lm_batch_for_step,
+                                 traffic_flow_batch, TrafficConfig,
+                                 make_lm_iterator, Prefetcher)

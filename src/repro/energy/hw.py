@@ -1,0 +1,51 @@
+"""Hardware specs — the constants behind every estimate in the system.
+
+TPU v5e numbers are the brief's three roofline constants; the power split is
+an assumption (marked) used only for GOP/J-style energy reporting, never for
+roofline fractions. The XC7S15 entry reproduces the paper's Table-I platform
+so ``benchmarks/table1_energy.py`` can compare like for like.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HWSpec:
+    name: str
+    peak_flops: float            # FLOP/s (bf16 for TPU; DSP MAC*2 for FPGA)
+    hbm_bw: float                # bytes/s main-memory bandwidth
+    link_bw: float               # bytes/s per ICI link (0: single device)
+    vmem_bytes: int              # on-chip fast memory (VMEM / BRAM)
+    hbm_bytes: int               # device memory capacity
+    active_w: float              # power while computing (ASSUMPTION for v5e)
+    idle_w: float                # power while gated/idle
+    mxu_align: int = 128         # matmul tile alignment
+
+    def energy_j(self, seconds: float, duty: float = 1.0) -> float:
+        return seconds * (self.active_w * duty + self.idle_w * (1 - duty))
+
+
+TPU_V5E = HWSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,           # bf16, per brief
+    hbm_bw=819e9,                # per brief
+    link_bw=50e9,                # per brief (~50 GB/s/link ICI)
+    vmem_bytes=128 * 1024 * 1024,
+    hbm_bytes=16 * 1024 ** 3,
+    active_w=200.0,              # ASSUMPTION — documented in DESIGN.md §6
+    idle_w=60.0,                 # ASSUMPTION
+)
+
+# The paper's platform: Spartan-7 XC7S15 @ 100 MHz (Table I).
+# 20 DSP48 slices * 100 MHz * 2 OP/MAC = 4 GOP/s peak; 10 BRAM36 = 45 KiB.
+XC7S15 = HWSpec(
+    name="xc7s15",
+    peak_flops=4e9,
+    hbm_bw=0.4e9,                # BRAM-fed, effectively on-chip
+    link_bw=0.0,
+    vmem_bytes=45 * 1024,
+    hbm_bytes=45 * 1024,
+    active_w=0.071,              # Table I: 71 mW measured
+    idle_w=0.010,
+)

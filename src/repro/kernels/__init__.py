@@ -1,0 +1,19 @@
+"""Hardware kernel templates (the paper's RTL-template library, on TPU).
+
+Each template: <name>/kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+<name>/ops.py (jit'd public wrapper; interpret=True on CPU), <name>/ref.py
+(pure-jnp oracle the kernel is validated against, shape/dtype-swept in
+tests/test_kernels_*.py).
+"""
+
+INTERPRET = None  # resolved lazily per-backend
+
+
+def use_interpret() -> bool:
+    """Pallas kernels execute for real only on TPU; elsewhere interpret."""
+    global INTERPRET
+    if INTERPRET is None:
+        import jax
+
+        INTERPRET = jax.default_backend() != "tpu"
+    return INTERPRET

@@ -1,0 +1,75 @@
+"""Public wrapper: (B,S,H,hd) layout, GQA-repeated inputs, head-dim padding.
+
+Training uses a ``jax.custom_vjp``: kernel forward, reference (recomputed,
+q-chunked) backward — the standard template-fwd/XLA-bwd split until a bwd
+template lands.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import use_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+LANE = 128
+
+
+def _to_bh(x):
+    b, s, h, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+
+def _from_bh(x, b, h):
+    bh, s, d = x.shape
+    return x.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True) -> jax.Array:
+    """q/k/v: (B, S, H, hd) (kv already GQA-repeated). Returns (B, S, H, hd)."""
+    return _flash_fwd_impl(q, k, v, causal)
+
+
+def _pow2_block(s: int, cap: int = 256) -> int:
+    b = 1
+    while b * 2 <= cap and s % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def _flash_fwd_impl(q, k, v, causal):
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    bq, bk = _pow2_block(sq), _pow2_block(sk)
+    if bq < 8 or bk < 8:                      # awkward seq length: oracle path
+        return attention_ref(q, k, v, causal)
+    pad_d = (-hd) % LANE
+    if pad_d:
+        pad = ((0, 0), (0, 0), (0, 0), (0, pad_d))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    # scale uses the REAL head dim, not the padded one
+    q = q * (hd ** -0.5) * ((hd + pad_d) ** 0.5)  # kernel divides by padded
+    o = flash_attention_pallas(_to_bh(q), _to_bh(k), _to_bh(v), causal=causal,
+                               block_q=bq, block_k=bk,
+                               interpret=use_interpret())
+    o = _from_bh(o, b, h)
+    return o[..., :hd]
+
+
+def _fwd(q, k, v, causal):
+    return _flash_fwd_impl(q, k, v, causal), (q, k, v)
+
+
+def _bwd(causal, res, do):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: attention_ref(q_, k_, v_, causal),
+                     q, k, v)
+    return vjp(do)
+
+
+flash_attention.defvjp(_fwd, _bwd)

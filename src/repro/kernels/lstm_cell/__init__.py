@@ -1,0 +1,1 @@
+from repro.kernels.lstm_cell.ops import lstm_window

@@ -1,0 +1,23 @@
+"""Public wrapper for the fused LSTM-window template."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import use_interpret
+from repro.kernels.lstm_cell.kernel import lstm_window_pallas
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def lstm_window(x: jax.Array, w: jax.Array, b: jax.Array,
+                *, block_b: int = 128) -> jax.Array:
+    """(B,S,d_in) × fused gate weights -> final hidden (B, hidden)."""
+    B = x.shape[0]
+    bb = min(block_b, B)
+    pad = (-B) % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+    out = lstm_window_pallas(x, w, b, block_b=bb, interpret=use_interpret())
+    return out[:B]

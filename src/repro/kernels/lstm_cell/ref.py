@@ -1,0 +1,18 @@
+"""Oracle: the model-layer LSTM (repro.model.lstm) restricted to one cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.model.lstm import lstm_cell_step
+
+
+def lstm_window_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, d_in) -> final hidden (B, hidden)."""
+    B, S, _ = x.shape
+    hidden = w.shape[1] // 4
+    h = jnp.zeros((B, hidden), x.dtype)
+    c = jnp.zeros((B, hidden), x.dtype)
+    for t in range(S):
+        h, c = lstm_cell_step(w, b, x[:, t], h, c)
+    return h

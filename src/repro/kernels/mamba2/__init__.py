@@ -1,0 +1,1 @@
+from repro.kernels.mamba2.ops import ssd

@@ -1,0 +1,2 @@
+"""Oracles: the per-step recurrence and the chunked einsum form."""
+from repro.model.ssm import ssd_reference, ssd_chunked  # noqa: F401

@@ -1,0 +1,71 @@
+"""int8×int8→int32 tiled matmul — the TPU analogue of the paper's DSP-slice
+fixed-point MAC template.
+
+Tiling: grid (M/BM, N/BN, K/BK), K innermost (sequential on TPU, so the
+int32 accumulator lives in a VMEM scratch across K steps). Weights arrive
+pre-quantized (per-output-channel scales); activations are quantized on the
+fly against a host-computed amax (per-tensor), matching the RTL template's
+static input format. MXU-aligned 128-multiples throughout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 128
+
+
+def _qmm_kernel(x_ref, w_ref, xscale_ref, wscale_ref, o_ref, acc_ref, *,
+                n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        xs = xscale_ref[0]
+        ws = wscale_ref[...]                       # (1, BN) per-channel
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) * xs
+                      * ws).astype(o_ref.dtype)
+
+
+def quant_matmul_pallas(
+    xq: jax.Array,        # (M, K) int8 — pre-quantized activations
+    wq: jax.Array,        # (K, N) int8
+    x_scale: jax.Array,   # () or (1,) f32
+    w_scale: jax.Array,   # (1, N) f32 per-output-channel
+    *, block_m: int = DEFAULT_BM, block_n: int = DEFAULT_BN,
+    block_k: int = DEFAULT_BK, out_dtype=jnp.float32, interpret: bool = False,
+) -> jax.Array:
+    M, K = xq.shape
+    K2, N = wq.shape
+    assert K == K2
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, \
+        (M, N, K, block_m, block_n, block_k)
+    n_k = K // block_k
+    grid = (M // block_m, N // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(xq, wq, x_scale.reshape(1), w_scale.reshape(1, N))

@@ -1,0 +1,38 @@
+"""Public jit'd wrapper for the quant_matmul template."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import use_interpret
+from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+from repro.kernels.quant_matmul.ref import quant_matmul_ref, quantize_act
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                   "use_ref"))
+def quant_matmul(x: jax.Array, wq: jax.Array, w_scale: jax.Array,
+                 *, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 128, use_ref: bool = False) -> jax.Array:
+    """f32/bf16 activations × pre-quantized int8 weights -> f32.
+
+    Pads M/K/N up to MXU-aligned block multiples (the RTL analogue pads to
+    the systolic array width), then dispatches the Pallas template.
+    """
+    xq, xs = quantize_act(x)
+    M, K = xq.shape
+    N = wq.shape[1]
+    if use_ref:
+        return quant_matmul_ref(xq, wq, xs, w_scale)
+    pm = (-M) % block_m
+    pk = (-K) % block_k
+    pn = (-N) % block_n
+    xq_p = jnp.pad(xq, ((0, pm), (0, pk)))
+    wq_p = jnp.pad(wq, ((0, pk), (0, pn)))
+    ws_p = jnp.pad(w_scale.reshape(1, -1), ((0, 0), (0, pn)))
+    out = quant_matmul_pallas(xq_p, wq_p, xs, ws_p,
+                              block_m=block_m, block_n=block_n,
+                              block_k=block_k, interpret=use_interpret())
+    return out[:M, :N]

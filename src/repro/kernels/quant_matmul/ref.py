@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the quant_matmul template."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(xq: jax.Array, wq: jax.Array, x_scale: jax.Array,
+                     w_scale: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    acc = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale.reshape(())
+            * w_scale.reshape(1, -1)).astype(out_dtype)
+
+
+def quantize_act(x: jax.Array):
+    """Per-tensor symmetric int8 quantization of activations."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)

@@ -1,0 +1,104 @@
+"""WKV6 chunked-recurrence template.
+
+Grid (B·H, n_chunks) — chunks innermost, so the (N, N) key→value state lives
+in VMEM scratch across a head's chunks (the BRAM-resident state of an RTL
+WKV pipeline). Within a chunk, subchunks of length l=16 are evaluated with
+exact pairwise decay (bounded (l, l, N) working set) and chained through the
+state with (l,N)×(N,N) MXU matmuls; all decay exponents are ≤ 0 (stable).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SUB = 16
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, hout_ref, s_ref,
+                 *, chunk: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    N = s_ref.shape[0]
+    ns = chunk // SUB
+    u = u_ref[0]                                     # (N,)
+
+    for a in range(ns):
+        sl = slice(a * SUB, (a + 1) * SUB)
+        r = r_ref[0, sl, :].astype(jnp.float32)      # (l, N)
+        k = k_ref[0, sl, :].astype(jnp.float32)
+        v = v_ref[0, sl, :].astype(jnp.float32)
+        w = w_ref[0, sl, :].astype(jnp.float32)      # log-decay ≤ 0
+        csub = jnp.cumsum(w, axis=0)
+        cprev = csub - w
+        tot = csub[-1:]                              # (1, N)
+
+        # intra-subchunk: A[i,j] = Σ_n r_i k_j e^{cprev_i - csub_j}, j<i
+        pair = cprev[:, None, :] - csub[None, :, :]  # (l, l, N)
+        mask = jnp.tril(jnp.ones((SUB, SUB), bool), -1)[:, :, None]
+        dec = jnp.where(mask, jnp.exp(jnp.where(mask, pair, 0.0)), 0.0)
+        A = jnp.einsum("in,ijn,jn->ij", r, dec, k,
+                       preferred_element_type=jnp.float32)
+        A = A + jnp.eye(SUB, dtype=jnp.float32) * jnp.einsum(
+            "in,n,in->i", r, u.astype(jnp.float32), k,
+            preferred_element_type=jnp.float32)[:, None]
+        y = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        # state read: (l,N)@(N,N) MXU
+        rdec = r * jnp.exp(cprev)
+        y = y + jax.lax.dot_general(rdec, s_ref[...],
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        # state update: S = diag(e^{tot}) S + Σ_j (k_j e^{tot-csub_j}) v_j^T
+        kdec = k * jnp.exp(tot - csub)               # (l, N)
+        T = jax.lax.dot_general(kdec, v, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s_ref[...] = s_ref[...] * jnp.exp(tot).T + T
+        o_ref[0, sl, :] = y.astype(o_ref.dtype)
+
+    @pl.when(c == n_chunks - 1)
+    def _emit_state():
+        hout_ref[0] = s_ref[...]
+
+
+def wkv6_pallas(
+    r: jax.Array,       # (BH, S, N)
+    k: jax.Array,
+    v: jax.Array,
+    w_log: jax.Array,   # (BH, S, N) f32, ≤ 0
+    u: jax.Array,       # (BH, N)  (u broadcast per head by the wrapper)
+    *, chunk: int = 128, interpret: bool = False,
+):
+    BH, S, N = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0 and chunk % SUB == 0, (S, chunk)
+    n_chunks = S // chunk
+    grid = (BH, n_chunks)
+    return pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, N), lambda bh, c: (bh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, N, N), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, N), r.dtype),
+            jax.ShapeDtypeStruct((BH, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w_log, u)

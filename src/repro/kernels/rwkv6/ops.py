@@ -1,0 +1,37 @@
+"""Public wrapper: (B,S,H,N) layout -> template layout, state in/out."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import use_interpret
+from repro.kernels.rwkv6.kernel import wkv6_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
+         u: jax.Array, h0: Optional[jax.Array] = None, *, chunk: int = 128
+         ) -> Tuple[jax.Array, jax.Array]:
+    """r/k/v/w_log: (B,S,H,N); u: (H,N). Returns (y, final_state).
+
+    NOTE: the template starts from a zero state; a nonzero ``h0`` is folded
+    in afterwards with one extra (S-decay) correction term: y += (r ⊙
+    e^{cum w}) h0 and S_final += e^{tot} h0. Exactness is preserved because
+    the recurrence is linear in the state.
+    """
+    B, S, H, N = r.shape
+    to = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    ub = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N)
+    y, hf = wkv6_pallas(to(r), to(k), to(v), to(w_log.astype(jnp.float32)),
+                        ub, chunk=chunk, interpret=use_interpret())
+    y = y.reshape(B, H, S, N).transpose(0, 2, 1, 3)
+    hf = hf.reshape(B, H, N, N)
+    if h0 is not None:
+        cum = jnp.cumsum(w_log.astype(jnp.float32), axis=1)   # (B,S,H,N)
+        rdec = r.astype(jnp.float32) * jnp.exp(cum - w_log)   # e^{c_{t-1}}
+        y = y + jnp.einsum("bshn,bhnp->bshp", rdec, h0).astype(y.dtype)
+        hf = hf + h0 * jnp.exp(cum[:, -1])[..., None]     # (B,H,N,1) key decay
+    return y, hf

@@ -1,0 +1,2 @@
+"""Oracle: the naive per-step WKV6 recurrence (model/rwkv.py)."""
+from repro.model.rwkv import wkv6_reference, wkv6_chunked  # noqa: F401

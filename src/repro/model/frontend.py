@@ -1,0 +1,58 @@
+"""Modality frontends — STUBS per the brief.
+
+``[audio]``/``[vlm]`` architectures specify the transformer BACKBONE only;
+``input_specs()`` provides precomputed frame/patch embeddings. What lives
+here is only the learned glue: the projector from frontend embedding space
+into the LM, and learned positional embeddings for the whisper encoder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import ModelConfig
+from repro.model.layers import Ctx, PSpec
+
+
+def frontend_schema(cfg: ModelConfig, tp: int = 16):
+    if cfg.frontend == "vision":
+        # InternVL-style pixel-unshuffle + 2-layer MLP projector (mlp1)
+        fd = cfg.frontend_dim
+        return {
+            "norm_scale": PSpec((fd,), P(), init="ones"),
+            "norm_bias": PSpec((fd,), P(), init="zeros"),
+            "w1": PSpec((fd, cfg.d_model), P()),
+            "b1": PSpec((cfg.d_model,), P(), init="zeros"),
+            "w2": PSpec((cfg.d_model, cfg.d_model), P()),
+            "b2": PSpec((cfg.d_model,), P(), init="zeros"),
+        }
+    if cfg.frontend == "audio":
+        # whisper: conv stem is stubbed; learned encoder position embeddings
+        assert cfg.encoder is not None
+        return {
+            "pos_emb": PSpec((cfg.encoder.n_positions, cfg.d_model), P(),
+                             init="embed"),
+            "in_proj": PSpec((cfg.frontend_dim, cfg.d_model), P()),
+        }
+    return {}
+
+
+def project_vision(p, patch_emb: jax.Array, ctx: Ctx) -> jax.Array:
+    """patch_emb: (B, n_tokens, frontend_dim) -> (B, n_tokens, d_model)."""
+    dt = ctx.compute_dtype
+    x = patch_emb.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    x = x * p["norm_scale"] + p["norm_bias"]
+    x = x.astype(dt)
+    h = jax.nn.gelu(x @ p["w1"].astype(dt) + p["b1"].astype(dt))
+    return h @ p["w2"].astype(dt) + p["b2"].astype(dt)
+
+
+def embed_audio(p, frames: jax.Array, ctx: Ctx) -> jax.Array:
+    """frames: (B, n_pos, frontend_dim) precomputed -> encoder input."""
+    dt = ctx.compute_dtype
+    h = frames.astype(dt) @ p["in_proj"].astype(dt)
+    return h + p["pos_emb"].astype(dt)[None, : frames.shape[1]]

@@ -1,0 +1,255 @@
+"""Shared layers + the parameter-schema machinery.
+
+A model's parameters are described once as a pytree of :class:`PSpec` leaves
+(shape, partition spec, dtype, init). ``init_params`` / ``abstract_params`` /
+``shardings`` all derive from the same schema, so the three can never diverge
+— the dry-run lowers against exactly the tree the trainer would allocate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import MeshConfig, ModelConfig, ParallelismConfig
+
+# ---------------------------------------------------------------------------
+# Parameter schema
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PSpec:
+    """One parameter leaf: shape + sharding + init, the single source of truth."""
+
+    shape: Tuple[int, ...]
+    pspec: P = P()
+    dtype: Any = jnp.float32
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override (default: 1/sqrt(fan_in))
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def tree_map_pspec(fn: Callable[[PSpec], Any], schema):
+    return jax.tree.map(fn, schema, is_leaf=is_pspec)
+
+
+def _init_leaf(spec: PSpec, key, dtype_override=None) -> jax.Array:
+    dtype = dtype_override or spec.dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 0.02
+        return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+    # fan-in normal
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale if spec.scale is not None else fan_in ** -0.5
+    return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+
+
+def init_params(schema, key, dtype_override=None):
+    """Materialize real arrays from a schema (smoke scale only)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_pspec)
+    out = []
+    for i, leaf in enumerate(leaves):
+        out.append(_init_leaf(leaf, jax.random.fold_in(key, i), dtype_override))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(schema, dtype_override=None):
+    """ShapeDtypeStruct stand-ins — no allocation; used by the dry-run."""
+    return tree_map_pspec(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype_override or s.dtype), schema
+    )
+
+
+def shardings(schema, mesh: Mesh):
+    return tree_map_pspec(lambda s: NamedSharding(mesh, s.pspec), schema)
+
+
+def pspecs(schema):
+    return tree_map_pspec(lambda s: s.pspec, schema)
+
+
+def param_count(schema) -> int:
+    import math
+
+    return sum(math.prod(leaf.shape)
+               for leaf in jax.tree.leaves(schema, is_leaf=is_pspec))
+
+
+# ---------------------------------------------------------------------------
+# Apply-time context
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Ctx:
+    """Threaded through every block's ``apply``."""
+
+    cfg: ModelConfig
+    mesh_cfg: MeshConfig
+    mode: str                                # "train" | "prefill" | "decode"
+    mesh: Optional[Mesh] = None
+    par: ParallelismConfig = dataclasses.field(default_factory=ParallelismConfig)
+    positions: Optional[jax.Array] = None    # (B, S) absolute positions
+    attn_impl: str = "ref"                   # "ref" | "flash" (Pallas template)
+
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        if self.par.grad_compression:
+            return ()   # inside the manual-DP shard_map: batch dims are local
+        return self.mesh_cfg.dp_axes
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh_cfg.axis_size("model")
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.par.compute_dtype)
+
+    def constrain(self, x: jax.Array, spec: Optional[P] = None) -> jax.Array:
+        """Pin activation layout: (batch over dp, rest replicated) by default."""
+        if self.mesh is None or self.mesh.size == 1:
+            return x
+        if spec is None:
+            spec = P(self.dp, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+def shard_axis(n: int, tp: int) -> Optional[str]:
+    """'model' if n shards evenly over the TP axis, else replicate (None)."""
+    return "model" if tp > 0 and n % tp == 0 and n >= tp else None
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_schema(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": PSpec((d,), P(), init="ones"),
+                "bias": PSpec((d,), P(), init="zeros")}
+    return {"scale": PSpec((d,), P(), init="ones")}
+
+
+def apply_norm(p, x: jax.Array, cfg: ModelConfig, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS norm over head_dim (qwen3 qk-norm)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (B, S) -> cos/sin (B, S, head_dim/2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd). Rotates pairs (even, odd) halves (llama convention)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU-2mat / relu^2)
+# ---------------------------------------------------------------------------
+
+
+def mlp_schema(cfg: ModelConfig, d_ff: Optional[int] = None, tp: int = 16):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    fa = shard_axis(f, tp)
+    if cfg.act == "gelu":
+        return {"wi": PSpec((d, f), P(None, fa)),
+                "wo": PSpec((f, d), P(fa, None))}
+    # swiglu (silu) and relu_sq share the gated 3-matrix layout for silu,
+    # 2-matrix for relu_sq
+    if cfg.act == "relu_sq":
+        return {"wi": PSpec((d, f), P(None, fa)),
+                "wo": PSpec((f, d), P(fa, None))}
+    return {"w_gate": PSpec((d, f), P(None, fa)),
+            "w_up": PSpec((d, f), P(None, fa)),
+            "wo": PSpec((f, d), P(fa, None))}
+
+
+def apply_mlp(p, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
+    dt = ctx.compute_dtype
+    xd = x.astype(dt)
+    if "w_gate" in p:
+        g = xd @ p["w_gate"].astype(dt)
+        u = xd @ p["w_up"].astype(dt)
+        h = jax.nn.silu(g) * u
+    else:
+        h = xd @ p["wi"].astype(dt)
+        if cfg.act == "gelu":
+            h = jax.nn.gelu(h)
+        else:  # relu^2 (RWKV channel-mix nonlinearity)
+            h = jnp.square(jax.nn.relu(h))
+    return (h @ p["wo"].astype(dt)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_schema(cfg: ModelConfig, tp: int = 16):
+    v = cfg.padded_vocab
+    va = None if cfg.embed_replicated else shard_axis(v, tp)
+    sch = {"embedding": PSpec((v, cfg.d_model), P(va, None), init="embed")}
+    if not cfg.tie_embeddings:
+        head_a = shard_axis(v, tp)
+        sch["lm_head"] = PSpec((cfg.d_model, v), P(None, head_a))
+    return sch
+
+
+def embed_tokens(p, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
+    e = p["embedding"]
+    h = jnp.take(e, tokens, axis=0)
+    return h.astype(ctx.compute_dtype)
+
+
+def lm_logits(p, h: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
+    dt = ctx.compute_dtype
+    if cfg.tie_embeddings:
+        w = p["embedding"].astype(dt).T
+    else:
+        w = p["lm_head"].astype(dt)
+    return (h.astype(dt) @ w).astype(jnp.float32)

@@ -1,0 +1,84 @@
+"""The paper's own accelerator workload: LSTM time-series predictor.
+
+Matches ref [11] (traffic-flow LSTM on the XC7S15): ``hidden=20`` cell,
+window of 6 univariate lags, single dense output neuron. This is the model
+behind Table I, reproduced in ``benchmarks/table1_energy.py``.
+
+The cell is written gate-fused (one (in+hidden) × 4·hidden matmul) — the same
+formulation the paper's RTL template uses (and our Pallas template in
+``kernels/lstm_cell`` mirrors), so estimation and "hardware" agree
+structurally. The fixed-point path quantizes exactly this graph.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import ModelConfig
+from repro.model.layers import Ctx, PSpec
+
+
+def lstm_schema(cfg: ModelConfig, tp: int = 0):
+    c = cfg.lstm
+    layers = []
+    for i in range(c.n_layers):
+        d_in = c.in_features if i == 0 else c.hidden
+        layers.append({
+            # gate order: i, f, g, o (fused)
+            "w": PSpec((d_in + c.hidden, 4 * c.hidden), P(), dtype=jnp.float32),
+            "b": PSpec((4 * c.hidden,), P(), dtype=jnp.float32, init="zeros"),
+        })
+    return {
+        "cells": layers,
+        "head_w": PSpec((c.hidden, c.out_features), P(), dtype=jnp.float32),
+        "head_b": PSpec((c.out_features,), P(), dtype=jnp.float32, init="zeros"),
+    }
+
+
+def lstm_cell_step(w, b, x_t, h, c):
+    """x_t: (B, D_in); h/c: (B, hidden). Returns (h', c')."""
+    hidden = h.shape[-1]
+    z = jnp.concatenate([x_t, h], axis=-1) @ w + b          # (B, 4*hidden)
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_apply(
+    p,
+    x: jax.Array,                    # (B, S, in_features) f32
+    cfg: ModelConfig,
+    state: Optional[Tuple] = None,
+) -> Tuple[jax.Array, Tuple]:
+    """Runs the stacked LSTM over the window; returns (pred (B, out), state)."""
+    c = cfg.lstm
+    B, S, _ = x.shape
+    h_states = []
+    seq = x
+    for li, cell in enumerate(p["cells"]):
+        h = jnp.zeros((B, c.hidden), seq.dtype) if state is None else state[li][0]
+        cc = jnp.zeros((B, c.hidden), seq.dtype) if state is None else state[li][1]
+        outs = []
+        for t in range(S):  # unrolled: window is 6 — exact cost accounting
+            h, cc = lstm_cell_step(cell["w"], cell["b"], seq[:, t], h, cc)
+            outs.append(h)
+        seq = jnp.stack(outs, axis=1)
+        h_states.append((h, cc))
+    pred = seq[:, -1] @ p["head_w"] + p["head_b"]
+    return pred, tuple(h_states)
+
+
+def lstm_flops(cfg: ModelConfig) -> int:
+    """MAC-counted ops per single inference (the paper counts OP = MAC*2)."""
+    c = cfg.lstm
+    total = 0
+    for i in range(c.n_layers):
+        d_in = c.in_features if i == 0 else c.hidden
+        per_step = 2 * (d_in + c.hidden) * 4 * c.hidden + 4 * c.hidden
+        total += per_step * c.seq_len
+    total += 2 * c.hidden * c.out_features
+    return total

@@ -1,0 +1,255 @@
+"""Mixture-of-Experts with expert parallelism over the "model" mesh axis.
+
+Three dispatch implementations, selectable via ``MoEConfig.impl``:
+
+- ``dense``  — oracle: every expert runs on every token, combined by routing
+               weights. O(E·T) compute; smoke scale only. Ground truth for
+               the other two.
+- ``psum``   — default EP: activations stay model-replicated (matching the
+               Megatron-TP layout between blocks); each TP shard computes its
+               local experts on the tokens routed to them (capacity-bounded
+               top-k gather), partial outputs are ``psum``-combined. Zero
+               extra collectives beyond the TP all-reduce.
+- ``a2a``    — classic expert-parallel dispatch: tokens are split over the
+               model axis (sequence-parallel), routed, exchanged with
+               ``all_to_all`` to their expert's shard, computed, returned and
+               ``all_gather``-ed. More collective traffic, less redundant
+               router/gather compute. A §Perf hillclimb lever.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import ModelConfig
+from repro.model.layers import Ctx, PSpec, shard_axis
+
+
+def moe_schema(cfg: ModelConfig, tp: int = 16):
+    m = cfg.moe
+    d = cfg.d_model
+    ea = shard_axis(m.n_experts, tp)
+    sch = {
+        "router": PSpec((d, m.n_experts), P(), dtype=jnp.float32),
+        "w_gate": PSpec((m.n_experts, d, m.d_expert), P(ea, None, None)),
+        "w_up": PSpec((m.n_experts, d, m.d_expert), P(ea, None, None)),
+        "w_down": PSpec((m.n_experts, m.d_expert, d), P(ea, None, None)),
+    }
+    if m.n_shared > 0:
+        fs = m.n_shared * m.d_shared
+        fa = shard_axis(fs, tp)
+        sch["shared"] = {
+            "w_gate": PSpec((d, fs), P(None, fa)),
+            "w_up": PSpec((d, fs), P(None, fa)),
+            "wo": PSpec((fs, d), P(fa, None)),
+        }
+    return sch
+
+
+def _router(p, x, m, dtype=jnp.float32):
+    """x: (T, D) -> (weights (T,k), ids (T,k), aux_loss). Router math in f32."""
+    logits = x.astype(dtype) @ p["router"].astype(dtype)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e mean_prob_e * mean_frac_e
+    frac = jnp.zeros((m.n_experts,), dtype).at[top_i.reshape(-1)].add(
+        1.0 / top_i.size
+    )
+    aux = m.n_experts * jnp.sum(probs.mean(0) * frac) * m.aux_loss_coef
+    return top_w, top_i, aux
+
+
+def _expert_ffn(xg, wg, wu, wd, dt):
+    h = jax.nn.silu(xg @ wg.astype(dt)) * (xg @ wu.astype(dt))
+    return h @ wd.astype(dt)
+
+
+def _shared_ffn(p, x, dt):
+    h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    return h @ p["wo"].astype(dt)
+
+
+def _capacity(n_tokens: int, m) -> int:
+    per_expert = n_tokens * m.top_k / m.n_experts
+    return max(4, int(per_expert * m.capacity_factor + 0.999))
+
+
+# ---------------------------------------------------------------------------
+# dense oracle
+# ---------------------------------------------------------------------------
+
+
+def moe_dense(p, x: jax.Array, cfg: ModelConfig, ctx: Ctx):
+    """(B,S,D) -> (B,S,D); every expert on every token. Oracle."""
+    m = cfg.moe
+    dt = ctx.compute_dtype
+    b, s, d = x.shape
+    xt = x.reshape(-1, d).astype(dt)
+    top_w, top_i, aux = _router(p, xt, m)
+    # full (T, E) combine weights
+    w_full = jnp.zeros((xt.shape[0], m.n_experts), jnp.float32)
+    w_full = jax.vmap(lambda w, i, row: row.at[i].set(w))(
+        top_w, top_i, w_full
+    )
+    ys = jnp.einsum(
+        "ted,te->td",
+        jnp.stack([
+            _expert_ffn(xt, p["w_gate"][e], p["w_up"][e], p["w_down"][e], dt)
+            for e in range(m.n_experts)
+        ], axis=1),
+        w_full.astype(dt),
+    )
+    if m.n_shared > 0:
+        ys = ys + _shared_ffn(p["shared"], xt, dt)
+    return ys.reshape(b, s, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# psum EP (default)
+# ---------------------------------------------------------------------------
+
+
+def _local_expert_pass(xt, top_w, top_i, wg, wu, wd, e_lo, n_local, cap, dt):
+    """Capacity-bounded compute of `n_local` experts [e_lo, e_lo+n_local)."""
+    t = xt.shape[0]
+    y = jnp.zeros((t, xt.shape[1]), dt)
+    for j in range(n_local):
+        e = e_lo + j
+        w_e = jnp.sum(jnp.where(top_i == e, top_w, 0.0), axis=-1)  # (T,)
+        sel_w, sel_i = jax.lax.top_k(w_e, min(cap, t))
+        xe = jnp.take(xt, sel_i, axis=0)
+        ye = _expert_ffn(xe, wg[j], wu[j], wd[j], dt)
+        y = y.at[sel_i].add(sel_w[:, None].astype(dt) * ye)
+    return y
+
+
+def moe_psum(p, x: jax.Array, cfg: ModelConfig, ctx: Ctx):
+    m = cfg.moe
+    dt = ctx.compute_dtype
+    b, s, d = x.shape
+    mesh = ctx.mesh
+    tp = ctx.tp_size
+    ea = shard_axis(m.n_experts, tp)
+    if mesh is None or ea is None:
+        return moe_dense(p, x, cfg, ctx)
+    n_local = m.n_experts // tp
+    dp = ctx.dp
+
+    def body(xt, router, wg, wu, wd):
+        t = xt.shape[0] * xt.shape[1]
+        xf = xt.reshape(t, d).astype(dt)
+        top_w, top_i, aux = _router({"router": router}, xf, m)
+        cap = _capacity(t, m)
+        mi = jax.lax.axis_index("model")
+        y = _local_expert_pass(
+            xf, top_w, top_i, wg, wu, wd, mi * n_local, n_local, cap, dt
+        )
+        y = jax.lax.psum(y, "model")
+        # aux is value-identical across model shards (router inputs are
+        # replicated); mark it varying then mean so the VMA checker can
+        # prove the P() out_spec
+        aux = jax.lax.pmean(jax.lax.pvary(aux, ("model",)), dp + ("model",))
+        return y.reshape(xt.shape).astype(xt.dtype), aux
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(dp, None, None), P(), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(P(dp, None, None), P()),
+    )
+    y, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if m.n_shared > 0:
+        y = y + _shared_ffn(p["shared"], x.astype(dt), dt).astype(x.dtype)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# all_to_all EP
+# ---------------------------------------------------------------------------
+
+
+def moe_a2a(p, x: jax.Array, cfg: ModelConfig, ctx: Ctx):
+    m = cfg.moe
+    dt = ctx.compute_dtype
+    b, s, d = x.shape
+    mesh = ctx.mesh
+    tp = ctx.tp_size
+    ea = shard_axis(m.n_experts, tp)
+    if mesh is None or ea is None or (b * s) % tp != 0:
+        return moe_psum(p, x, cfg, ctx)
+    n_local = m.n_experts // tp
+    dp = ctx.dp
+
+    def body(xt, router, wg, wu, wd):
+        t_loc = xt.shape[0] * xt.shape[1]
+        xf = xt.reshape(t_loc, d).astype(dt)
+        mi = jax.lax.axis_index("model")
+        t_m = t_loc // tp
+        # sequence-split across the model axis: this shard's token slice
+        xs = jax.lax.dynamic_slice_in_dim(xf, mi * t_m, t_m, axis=0)
+        top_w, top_i, aux = _router({"router": router}, xs, m)
+        # flatten (token, k) assignments
+        a_tok = jnp.repeat(jnp.arange(t_m), m.top_k)
+        a_exp = top_i.reshape(-1)
+        a_w = top_w.reshape(-1)
+        a_dst = a_exp // n_local
+        cs = _capacity(t_m, m) * max(1, m.top_k)  # per-destination slots
+        cs = min(cs, t_m * m.top_k)
+        send_x, send_meta, send_tok, send_w = [], [], [], []
+        for dst in range(tp):
+            w_d = jnp.where(a_dst == dst, a_w, -1.0)
+            sel_w, sel = jax.lax.top_k(w_d, cs)
+            valid = sel_w > 0
+            send_x.append(jnp.take(xs, a_tok[sel], axis=0) * valid[:, None])
+            send_meta.append(jnp.where(valid, a_exp[sel] % n_local, n_local))
+            send_tok.append(a_tok[sel])
+            send_w.append(jnp.where(valid, sel_w, 0.0))
+        sx = jnp.stack(send_x)                      # (tp, cs, d)
+        sm = jnp.stack(send_meta)                   # (tp, cs) local expert id
+        # exchange tokens with expert owners
+        rx = jax.lax.all_to_all(sx, "model", 0, 0, tiled=False)
+        rm = jax.lax.all_to_all(sm, "model", 0, 0, tiled=False)
+        rxf = rx.reshape(tp * cs, d)
+        rmf = rm.reshape(tp * cs)
+        ry = jnp.zeros_like(rxf)
+        for j in range(n_local):
+            mask = (rmf == j).astype(dt)[:, None]
+            ry = ry + mask * _expert_ffn(rxf, wg[j], wu[j], wd[j], dt)
+        # return outputs to the token owners
+        back = jax.lax.all_to_all(ry.reshape(tp, cs, d), "model", 0, 0,
+                                  tiled=False)
+        ys = jnp.zeros((t_m, d), dt)
+        for dst in range(tp):
+            ys = ys.at[send_tok[dst]].add(send_w[dst][:, None].astype(dt)
+                                          * back[dst])
+        # restore model-replicated activations
+        y = jax.lax.all_gather(ys, "model", axis=0, tiled=True)
+        aux = jax.lax.pmean(aux, dp + ("model",))
+        return y.reshape(xt.shape).astype(xt.dtype), aux
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(dp, None, None), P(), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,   # all_to_all round-trip defeats replication inference
+    )
+    y, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if m.n_shared > 0:
+        y = y + _shared_ffn(p["shared"], x.astype(dt), dt).astype(x.dtype)
+    return y, aux
+
+
+IMPLS = {"dense": moe_dense, "psum": moe_psum, "a2a": moe_a2a}
+
+
+def moe_apply(p, x: jax.Array, cfg: ModelConfig, ctx: Ctx):
+    impl = cfg.moe.impl
+    return IMPLS[impl](p, x, cfg, ctx)

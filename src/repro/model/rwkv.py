@@ -1,0 +1,316 @@
+"""RWKV6 ("Finch") — attention-free time-mix with data-dependent decay.
+
+TPU adaptation (the paper's "RTL template" idea applied to the WKV op):
+the WKV recurrence is evaluated in *chunked* form — within a chunk the
+quadratic part is computed over small subchunks (exact pairwise decay,
+bounded (l, l, N) working set that fits VMEM), the subchunk state carry is a
+python-unrolled loop (exact ``cost_analysis`` accounting), and the
+chunk-level state carry is a parallel segsum matmul over the chunk axis (no
+``lax.scan``, so the dry-run's FLOP counts are exact). All decay factors are
+differences of cumulative log-decays with the later boundary subtracted, so
+every ``exp`` argument is ≤ 0 — stable in bf16/f32 without rescaling hacks.
+
+``kernels/rwkv6`` holds the Pallas template for the intra-chunk part;
+``ssd``-style state layout: per layer {"wkv": (B,H,N,N) f32, "shift_att",
+"shift_ffn": (B, D)}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import ModelConfig
+from repro.model.layers import Ctx, PSpec, shard_axis
+
+SUBCHUNK = 16
+MIX_RANK = 32
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+
+def rwkv_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    N = cfg.rwkv.head_size
+    H = cfg.d_model // N
+    return H, N
+
+
+def rwkv_time_schema(cfg: ModelConfig, tp: int = 16):
+    d = cfg.d_model
+    H, N = rwkv_dims(cfg)
+    da = d  # d_att == d_model in rwkv6
+    ha = shard_axis(H, tp)
+    aa = shard_axis(da, tp)
+    lora = cfg.rwkv.decay_lora
+    return {
+        "maa_x": PSpec((d,), P(), init="zeros"),
+        "maa_wkvrg": PSpec((5, d), P(), init="zeros"),
+        "maa_w1": PSpec((d, 5 * MIX_RANK), P(), scale=0.01),
+        "maa_w2": PSpec((5, MIX_RANK, d), P(), scale=0.01),
+        "decay": PSpec((da,), P(aa), init="zeros"),          # resting log-log decay
+        "decay_w1": PSpec((d, lora), P(), scale=0.01),
+        "decay_w2": PSpec((lora, da), P(None, aa), scale=0.01),
+        "u": PSpec((H, N), P(ha, None), init="zeros"),       # time_faaaa bonus
+        "wr": PSpec((d, da), P(None, aa)),
+        "wk": PSpec((d, da), P(None, aa)),
+        "wv": PSpec((d, da), P(None, aa)),
+        "wg": PSpec((d, da), P(None, aa)),
+        "ln_x_scale": PSpec((da,), P(aa), init="ones"),
+        "ln_x_bias": PSpec((da,), P(aa), init="zeros"),
+        "wo": PSpec((da, d), P(aa, None)),
+    }
+
+
+def rwkv_channel_schema(cfg: ModelConfig, tp: int = 16):
+    d, f = cfg.d_model, cfg.d_ff
+    fa = shard_axis(f, tp)
+    return {
+        "maa_k": PSpec((d,), P(), init="zeros"),
+        "maa_r": PSpec((d,), P(), init="zeros"),
+        "wk": PSpec((d, f), P(None, fa)),
+        "wv": PSpec((f, d), P(fa, None)),
+        "wr": PSpec((d, d), P()),
+    }
+
+
+def rwkv_state_schema(cfg: ModelConfig, batch: int, dp_axes, tp: int = 16):
+    H, N = rwkv_dims(cfg)
+    ha = shard_axis(H, tp)
+    bspec = dp_axes if batch >= 16 else None
+    return {
+        "wkv": PSpec((batch, H, N, N), P(bspec, ha, None, None),
+                     dtype=jnp.float32, init="zeros"),
+        "shift_att": PSpec((batch, cfg.d_model), P(bspec, None),
+                           dtype=jnp.bfloat16, init="zeros"),
+        "shift_ffn": PSpec((batch, cfg.d_model), P(bspec, None),
+                           dtype=jnp.bfloat16, init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV6: chunked evaluation + single-step recurrence
+# ---------------------------------------------------------------------------
+
+
+def wkv6_chunked(
+    r: jax.Array,      # (B, S, H, N)
+    k: jax.Array,      # (B, S, H, N)
+    v: jax.Array,      # (B, S, H, N)
+    w_log: jax.Array,  # (B, S, H, N) log-decay, ≤ 0, f32
+    u: jax.Array,      # (H, N)
+    h0: Optional[jax.Array] = None,   # (B, H, N, N) key->value state
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,N), final_state (B,H,N,N)). See module docstring."""
+    B, S, H, N = r.shape
+    chunk = min(chunk, S)
+    chunk = ((chunk + SUBCHUNK - 1) // SUBCHUNK) * SUBCHUNK  # SUB multiple
+    S0 = S
+    if S % chunk:  # pad tail: w_log=0 (no decay) and k=0 (no contribution)
+        extra = chunk - S % chunk
+        pad4 = ((0, 0), (0, extra), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(t, pad4) for t in (r, k, v))
+        w_log = jnp.pad(w_log, pad4)
+        S = S + extra
+    nc = S // chunk
+    l = min(SUBCHUNK, chunk)
+    ns = chunk // l
+    assert chunk % l == 0
+
+    dt = r.dtype            # caller's compute dtype (bf16 on TPU, f32 on CPU)
+    f32 = jnp.float32
+
+    def shape_cs(t):  # (B,S,H,N) -> (B,nc,ns,l,H,N)
+        return t.reshape(B, nc, ns, l, H, N)
+
+    rc, kc, vc = shape_cs(r.astype(dt)), shape_cs(k.astype(dt)), shape_cs(v.astype(dt))
+    wc = shape_cs(w_log.astype(f32))
+
+    csub = jnp.cumsum(wc, axis=3)                     # within-subchunk inclusive
+    cprev = csub - wc                                 # exclusive (≤ 0 diffs)
+    sub_tot = csub[:, :, :, -1]                       # (B,nc,ns,H,N) subchunk decay
+
+    # ---- intra-subchunk exact pairwise (l × l, bounded working set) --------
+    # A[i,j] = sum_n r_i k_j exp(cprev_i - csub_j)   (j < i), diag uses u.
+    pair = cprev[:, :, :, :, None] - csub[:, :, :, None, :]   # (B,nc,ns,l,l,H,N)
+    mask = jnp.tril(jnp.ones((l, l), bool), -1)[None, None, None, :, :, None, None]
+    dec = jnp.exp(jnp.where(mask, pair, -jnp.inf)).astype(dt)  # exp(-inf)=0, grad-safe
+    A = jnp.einsum("bcsihn,bcsijhn,bcsjhn->bcsijh", rc, dec, kc,
+                   preferred_element_type=f32)
+    A_diag = jnp.einsum("bcsihn,hn,bcsihn->bcsih", rc, u.astype(dt), kc,
+                        preferred_element_type=f32)
+    A = A + jnp.einsum("bcsih,ij->bcsijh", A_diag,
+                       jnp.eye(l, dtype=f32))
+    y = jnp.einsum("bcsijh,bcsjhn->bcsihn", A.astype(dt), vc,
+                   preferred_element_type=f32).astype(f32)
+
+    # ---- per-subchunk totals T_a = sum_j (k_j ⊙ exp(sub_tot - csub_j)) v_j^T
+    kdec = (kc.astype(f32) * jnp.exp(sub_tot[:, :, :, None] - csub)).astype(dt)
+    T = jnp.einsum("bcsjhn,bcsjhp->bcshnp", kdec, vc,
+                   preferred_element_type=f32)        # (B,nc,ns,H,N,N)
+
+    # ---- within-chunk subchunk state carry (python-unrolled, exact cost) ---
+    # s_a = state at start of subchunk a relative to chunk start
+    s = jnp.zeros((B, nc, H, N, N), f32)
+    s_list = []
+    for a in range(ns):
+        s_list.append(s)
+        s = s * jnp.exp(sub_tot[:, :, a])[..., None] + T[:, :, a]
+    chunk_T = s                                        # contribution of chunk, decayed to end
+    s_stack = jnp.stack(s_list, axis=2)                # (B,nc,ns,H,N,N)
+    rdec = (rc.astype(f32) * jnp.exp(cprev)).astype(dt)
+    y = y + jnp.einsum("bcsihn,bcshnp->bcsihp", rdec,
+                       s_stack.astype(dt), preferred_element_type=f32)
+
+    # ---- chunk-level state carry: parallel segsum over the chunk axis ------
+    chunk_tot = jnp.sum(wc, axis=(2, 3))               # (B,nc,H,N) log decay/chunk
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, N), f32)
+    states = jnp.concatenate([h0[:, None], chunk_T], axis=1)  # (B,nc+1,H,N,N)
+    pad_tot = jnp.pad(chunk_tot, ((0, 0), (1, 0), (0, 0), (0, 0)))
+    cs = jnp.cumsum(pad_tot, axis=1)                   # (B,nc+1,H,N)
+    seg = cs[:, :, None] - cs[:, None, :]              # (B,z,c,H,N) z≥c valid
+    zmask = jnp.tril(jnp.ones((nc + 1, nc + 1), bool), 0)[None, :, :, None, None]
+    segd = jnp.where(zmask, jnp.exp(seg), 0.0)
+    h_all = jnp.einsum("bzchn,bchnp->bzhnp", segd, states)    # (B,nc+1,H,N,N)
+    h_prev, h_final = h_all[:, :-1], h_all[:, -1]
+
+    # decay of r relative to chunk start = cumulative over prior subchunks + cprev
+    sub_cum = jnp.cumsum(sub_tot, axis=2) - sub_tot    # exclusive over subchunks
+    r_chunk_dec = (rc.astype(f32)
+                   * jnp.exp(sub_cum[:, :, :, None] + cprev)).astype(dt)
+    y = y + jnp.einsum("bcsihn,bchnp->bcsihp", r_chunk_dec,
+                       h_prev.astype(dt), preferred_element_type=f32)
+    return y.reshape(B, S, H, N)[:, :S0], h_final
+
+
+def wkv6_step(r, k, v, w_log, u, h):
+    """Single decode step. r/k/v/w_log: (B,H,N); h: (B,H,N,N) key->value."""
+    f32 = jnp.float32
+    rf, kf, vf = r.astype(f32), k.astype(f32), v.astype(f32)
+    bonus = jnp.einsum("bhn,hn,bhn->bh", rf, u.astype(f32), kf)
+    y = jnp.einsum("bhn,bhnp->bhp", rf, h) + bonus[..., None] * vf
+    h_new = h * jnp.exp(w_log.astype(f32))[..., None] \
+        + jnp.einsum("bhn,bhp->bhnp", kf, vf)
+    return y.astype(r.dtype), h_new
+
+
+def wkv6_reference(r, k, v, w_log, u, h0=None):
+    """Naive scan oracle. r/k/v/w_log: (B,S,H,N)."""
+    B, S, H, N = r.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(h, t):
+        y, h_new = wkv6_step(r[:, t], k[:, t], v[:, t], w_log[:, t], u, h)
+        return h_new, y
+
+    h_final, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x: (B,S,D); prev: (B,D) last token of the previous segment (or None)."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :].astype(x.dtype)
+    first = (jnp.zeros_like(x[:, :1]) if prev is None
+             else prev[:, None, :].astype(x.dtype))
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xprev):
+    """Data-dependent token-shift interpolation -> (x_w, x_k, x_v, x_r, x_g)."""
+    delta = xprev - x
+    xxx = x + delta * p["maa_x"].astype(x.dtype)
+    B, S, d = x.shape
+    mix = jnp.tanh(xxx @ p["maa_w1"].astype(x.dtype)).reshape(B, S, 5, MIX_RANK)
+    adj = jnp.einsum("bsfr,frd->bsfd", mix, p["maa_w2"].astype(x.dtype))
+    mu = p["maa_wkvrg"].astype(x.dtype)[None, None] + adj      # (B,S,5,d)
+    return tuple(x + delta * mu[:, :, i] for i in range(5))
+
+
+def _per_head_groupnorm(y, scale, bias, H, N, eps=1e-5):
+    B, S = y.shape[0], y.shape[1]
+    yf = y.reshape(B, S, H, N).astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(B, S, H * N)
+    return (yn * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(y.dtype)
+
+
+def rwkv_time_mix(
+    p,
+    hx: jax.Array,                     # (B,S,D) normed input
+    ctx: Ctx,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    cfg = ctx.cfg
+    dt = ctx.compute_dtype
+    H, N = rwkv_dims(cfg)
+    B, S, d = hx.shape
+    x = hx.astype(dt)
+
+    prev = state["shift_att"] if state is not None else None
+    xprev = _token_shift(x, prev)
+    x_w, x_k, x_v, x_r, x_g = _ddlerp(p, x, xprev)
+
+    dlora = jnp.tanh(x_w @ p["decay_w1"].astype(dt)) @ p["decay_w2"].astype(dt)
+    w_log = -jnp.exp(p["decay"].astype(jnp.float32)
+                     + dlora.astype(jnp.float32))              # (B,S,da) ≤ 0
+    r = (x_r @ p["wr"].astype(dt)).reshape(B, S, H, N)
+    k = (x_k @ p["wk"].astype(dt)).reshape(B, S, H, N)
+    v = (x_v @ p["wv"].astype(dt)).reshape(B, S, H, N)
+    g = jax.nn.silu(x_g @ p["wg"].astype(dt))
+
+    new_state = None
+    if ctx.mode == "decode":
+        assert state is not None and S == 1
+        y1, h_new = wkv6_step(r[:, 0], k[:, 0], v[:, 0],
+                              w_log.reshape(B, 1, H, N)[:, 0], p["u"],
+                              state["wkv"])
+        y = y1[:, None]
+        new_state = {"wkv": h_new, "shift_att": x[:, -1]}
+    else:
+        h0 = state["wkv"] if state is not None else None
+        y, h_final = wkv6_chunked(r, k, v, w_log.reshape(B, S, H, N),
+                                  p["u"], h0=h0, chunk=cfg.rwkv.chunk)
+        if ctx.mode == "prefill":
+            new_state = {"wkv": h_final, "shift_att": x[:, -1]}
+
+    y = y.reshape(B, S, H * N).astype(dt)
+    y = _per_head_groupnorm(y, p["ln_x_scale"], p["ln_x_bias"], H, N) * g
+    out = (y @ p["wo"].astype(dt)).astype(hx.dtype)
+    return out, new_state
+
+
+def rwkv_channel_mix(
+    p,
+    hx: jax.Array,
+    ctx: Ctx,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    dt = ctx.compute_dtype
+    x = hx.astype(dt)
+    prev = state["shift_ffn"] if state is not None else None
+    xprev = _token_shift(x, prev)
+    delta = xprev - x
+    x_k = x + delta * p["maa_k"].astype(dt)
+    x_r = x + delta * p["maa_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(x_k @ p["wk"].astype(dt)))
+    kv = kk @ p["wv"].astype(dt)
+    out = (jax.nn.sigmoid(x_r @ p["wr"].astype(dt)) * kv).astype(hx.dtype)
+    new_state = None
+    if ctx.mode in ("prefill", "decode"):
+        new_state = {"shift_ffn": x[:, -1]}
+    return out, new_state

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
+                               opt_state_schema)

@@ -1,0 +1,106 @@
+"""Fixed-point (Q-format) quantization — the paper's core optimization.
+
+ElasticAI-Creator translates models to RTL with fixed-point arithmetic
+(power-of-two scales, so the FPGA needs only shifts, no multipliers for
+rescaling). We reproduce exactly that: Q(total_bits, frac_bits) with
+round-to-nearest and saturation, plus a straight-through estimator so the
+same graph is trainable (QAT).
+
+On TPU the analogue of the DSP-slice int MAC is the int8 MXU path — see
+``repro.quant.ptq`` and ``kernels/quant_matmul`` for that (beyond-paper)
+variant; this module is the paper-faithful one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FxpFormat:
+    """Q(total_bits, frac_bits): 1 sign bit, total-frac-1 integer bits."""
+
+    total_bits: int = 8
+    frac_bits: int = 6
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def lo(self) -> int:
+        return -(2 ** (self.total_bits - 1))
+
+    @property
+    def hi(self) -> int:
+        return 2 ** (self.total_bits - 1) - 1
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.hi / self.scale
+
+    def __str__(self) -> str:
+        return f"Q{self.total_bits}.{self.frac_bits}"
+
+
+def fxp_quantize(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Round-to-nearest, saturating. Returns the *dequantized* f32 value."""
+    q = jnp.round(x.astype(jnp.float32) * fmt.scale)
+    q = jnp.clip(q, fmt.lo, fmt.hi)
+    return q / fmt.scale
+
+
+def fxp_to_int(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """The integer codes an RTL template would hold in BRAM."""
+    q = jnp.round(x.astype(jnp.float32) * fmt.scale)
+    q = jnp.clip(q, fmt.lo, fmt.hi)
+    dtype = jnp.int8 if fmt.total_bits <= 8 else jnp.int16 \
+        if fmt.total_bits <= 16 else jnp.int32
+    return q.astype(dtype)
+
+
+@jax.custom_vjp
+def fxp_fake_quant(x: jax.Array, scale: jax.Array, lo: float, hi: float):
+    q = jnp.clip(jnp.round(x * scale), lo, hi)
+    return q / scale
+
+
+def _fq_fwd(x, scale, lo, hi):
+    return fxp_fake_quant(x, scale, lo, hi), (x, scale, lo, hi)
+
+
+def _fq_bwd(res, g):
+    x, scale, lo, hi = res
+    # STE with saturation masking: no gradient where the value clipped
+    inside = (x * scale >= lo) & (x * scale <= hi)
+    return (jnp.where(inside, g, 0.0), None, None, None)
+
+
+fxp_fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    return fxp_fake_quant(x.astype(jnp.float32), jnp.float32(fmt.scale),
+                          float(fmt.lo), float(fmt.hi))
+
+
+def pick_frac_bits(x: jax.Array, total_bits: int) -> int:
+    """Largest frac_bits such that amax still fits (power-of-two scale)."""
+    amax = float(jnp.max(jnp.abs(x)))
+    if amax == 0.0:
+        return total_bits - 1
+    import math
+
+    int_bits = max(0, math.ceil(math.log2(amax + 1e-12) + 1e-9) + 1)
+    return max(0, min(total_bits - 1, total_bits - 1 - int_bits))
+
+
+def quant_error(x: jax.Array, fmt: FxpFormat) -> float:
+    """RMS quantization error — reported in the creator's stage-1 report."""
+    return float(jnp.sqrt(jnp.mean(jnp.square(x - fxp_quantize(x, fmt)))))

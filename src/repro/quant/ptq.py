@@ -1,0 +1,68 @@
+"""Post-training int8 quantization — the beyond-paper TPU-native variant.
+
+The paper's FPGA templates use fixed-point MACs in DSP slices; the TPU
+analogue is the int8 MXU path. We quantize weights symmetric per-output-
+channel to int8 + f32 scales; ``kernels/quant_matmul`` is the Pallas
+template that consumes this layout (int8×int8→int32 MAC, rescale on the
+way out of VMEM), and :func:`int8_matmul_ref` is its jnp oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class Int8Params:
+    q: Any        # int8 codes, same tree structure as the source weights
+    scale: Any    # f32 per-output-channel scales (1, out) per leaf
+    skipped: Any  # leaves kept in full precision (ndim < 2)
+
+
+def _quant_leaf(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=tuple(range(w.ndim - 1)),
+                   keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def quantize_params_int8(params) -> Int8Params:
+    flat, tdef = jax.tree.flatten(params)
+    qs, scales, skipped = [], [], []
+    for leaf in flat:
+        if leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating):
+            q, s = _quant_leaf(leaf)
+            qs.append(q), scales.append(s), skipped.append(None)
+        else:
+            qs.append(None), scales.append(None), skipped.append(leaf)
+    return Int8Params(q=jax.tree.unflatten(tdef, qs),
+                      scale=jax.tree.unflatten(tdef, scales),
+                      skipped=jax.tree.unflatten(tdef, skipped))
+
+
+def dequantize_params(ip: Int8Params, dtype=jnp.bfloat16):
+    def deq(q, s, skip):
+        if q is None:
+            return skip
+        return (q.astype(jnp.float32) * s).astype(dtype)
+
+    return jax.tree.map(deq, ip.q, ip.scale, ip.skipped,
+                        is_leaf=lambda x: x is None)
+
+
+def int8_matmul_ref(x: jax.Array, wq: jax.Array, scale: jax.Array,
+                    act_amax: float = 0.0) -> jax.Array:
+    """Oracle for kernels/quant_matmul: dynamic per-tensor activation quant,
+    int8×int8→int32 MAC, rescale to f32. x: (..., K), wq: (K, N) int8."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf)) if act_amax == 0.0 else jnp.float32(act_amax)
+    xs = jnp.maximum(amax, 1e-8) / 127.0
+    xq = jnp.clip(jnp.round(xf / xs), -127, 127).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        xq, wq, (((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * xs * scale.reshape(1, -1)

@@ -1,0 +1,98 @@
+"""Quantization-aware training for translatable components.
+
+The paper's Stage-1 loop: train in the host framework with fake-quantized
+weights/activations so the translated fixed-point accelerator matches the
+evaluated accuracy. Includes the FPGA-friendly piecewise-linear activation
+variants (``hard_sigmoid``/``hard_tanh``) the RTL templates implement as
+LUT-free comparators — selectable so developers can measure the accuracy
+cost of the cheaper hardware before synthesis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig
+from repro.quant.fixedpoint import FxpFormat, fake_quant
+
+
+@dataclass(frozen=True)
+class QATConfig:
+    weight_fmt: FxpFormat = FxpFormat(8, 6)
+    act_fmt: FxpFormat = FxpFormat(8, 4)
+    accum_fmt: FxpFormat = FxpFormat(16, 8)   # DSP accumulator width
+    hard_activations: bool = True             # PWL sigmoid/tanh (RTL-style)
+    quantize_activations: bool = True
+
+
+def hard_sigmoid(x: jax.Array) -> jax.Array:
+    """PWL sigmoid: exact at 0/±2.5, slope 0.2 — one comparator + shift-add."""
+    return jnp.clip(0.2 * x + 0.5, 0.0, 1.0)
+
+
+def hard_tanh(x: jax.Array) -> jax.Array:
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def fake_quant_tree(params, fmt: FxpFormat):
+    """Fake-quantize every ≥2-D tensor (weights); leave biases full-width."""
+    return jax.tree.map(
+        lambda p: fake_quant(p, fmt) if p.ndim >= 2 else p, params)
+
+
+def make_qat_lstm_apply(cfg: ModelConfig, qcfg: QATConfig):
+    """Quantized version of the paper's LSTM graph (see model/lstm.py).
+
+    Mirrors what the generated RTL computes: Q-format weights, activations
+    re-quantized after every nonlinearity, wide accumulator for the MACs.
+    """
+    sig = hard_sigmoid if qcfg.hard_activations else jax.nn.sigmoid
+    th = hard_tanh if qcfg.hard_activations else jnp.tanh
+
+    def aq(x):
+        return fake_quant(x, qcfg.act_fmt) if qcfg.quantize_activations else x
+
+    def cell_step(w, b, x_t, h, c):
+        wq = fake_quant(w, qcfg.weight_fmt)
+        bq = fake_quant(b, qcfg.accum_fmt)
+        z = jnp.concatenate([x_t, h], axis=-1) @ wq + bq
+        z = fake_quant(z, qcfg.accum_fmt)          # accumulator truncation
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c_new = aq(sig(f)) * c + aq(sig(i)) * aq(th(g))
+        c_new = fake_quant(c_new, qcfg.accum_fmt)
+        h_new = aq(sig(o)) * aq(th(c_new))
+        return aq(h_new), c_new
+
+    def apply(params, x, state=None):
+        c = cfg.lstm
+        B, S, _ = x.shape
+        seq = aq(x)
+        h_states = []
+        for li, cell in enumerate(params["cells"]):
+            h = jnp.zeros((B, c.hidden), x.dtype) if state is None else state[li][0]
+            cc = jnp.zeros((B, c.hidden), x.dtype) if state is None else state[li][1]
+            outs = []
+            for t in range(S):
+                h, cc = cell_step(cell["w"], cell["b"], seq[:, t], h, cc)
+                outs.append(h)
+            seq = jnp.stack(outs, axis=1)
+            h_states.append((h, cc))
+        wq = fake_quant(params["head_w"], qcfg.weight_fmt)
+        pred = seq[:, -1] @ wq + params["head_b"]
+        return pred, tuple(h_states)
+
+    return apply
+
+
+def make_qat_loss(cfg: ModelConfig, qcfg: QATConfig):
+    apply = make_qat_lstm_apply(cfg, qcfg)
+
+    def loss_fn(params, batch):
+        pred, _ = apply(params, batch["x"])
+        loss = jnp.mean(jnp.square(pred - batch["y"]))
+        return loss, {"loss": loss}
+
+    return loss_fn

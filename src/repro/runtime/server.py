@@ -1,0 +1,141 @@
+"""Batched serving runtime: continuous-batching-lite with a fixed slot pool.
+
+The production pattern kept intact at container scale:
+  * a fixed pool of ``batch_slots`` sequences decodes in lock-step (one
+    jitted ``decode_step`` per tick over the whole pool);
+  * new requests are prefilled (jitted prefill) and inserted into free slots
+    with their KV/state caches padded to ``max_len``;
+  * finished sequences (EOS or length) free their slot immediately;
+  * caches are donated buffer-to-buffer each tick (no reallocation).
+
+For SSM/RWKV archs the "cache" is the recurrent state — same code path, the
+pad is a no-op. Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import MeshConfig, ModelConfig, ParallelismConfig, ShapeConfig
+from repro.model.lm import make_decode_step, make_prefill_step
+from repro.model.transformer import pad_cache
+
+
+@dataclass
+class ServerConfig:
+    batch_slots: int = 4
+    max_len: int = 128
+    eos_token: int = 1
+    temperature: float = 0.0      # 0 = greedy
+    seed: int = 0
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig,
+                 mesh_cfg: MeshConfig, par: Optional[ParallelismConfig] = None,
+                 mesh=None):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        par = par or ParallelismConfig(compute_dtype="float32")
+        self._prefill = jax.jit(make_prefill_step(cfg, mesh_cfg, par, mesh))
+        self._decode = jax.jit(make_decode_step(cfg, mesh_cfg, par, mesh),
+                               donate_argnums=(2,))
+        self._rng = np.random.default_rng(scfg.seed)
+        self._slots: List[Optional[Request]] = [None] * scfg.batch_slots
+        self._cache = None            # batched cache across slots
+        self._last_tok = np.zeros((scfg.batch_slots, 1), np.int32)
+        self._queue: List[Request] = []
+        self._next_rid = 0
+        self.requests: Dict[int, Request] = {}
+
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, list(prompt), max_new_tokens)
+        self._queue.append(req)
+        self.requests[rid] = req
+        return rid
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self._queue:
+                break
+            req = self._queue.pop(0)
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, cache = self._prefill(self.params, {"tokens": tokens})
+            cache = pad_cache(cache, self.scfg.max_len)
+            tok = self._sample(np.asarray(logits))
+            req.out_tokens.append(int(tok[0]))
+            self._install(slot, req, cache, tok)
+
+    def _install(self, slot: int, req, cache, tok) -> None:
+        self._slots[slot] = req
+        self._last_tok[slot, 0] = tok[0]
+        if self._cache is None:
+            # materialize the pool cache by tiling the first request's cache
+            self._cache = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a] * self.scfg.batch_slots, axis=0), cache)
+        else:
+            self._cache = jax.tree.map(
+                lambda pool, one: jax.lax.dynamic_update_slice_in_dim(
+                    pool, one.astype(pool.dtype), slot, axis=0),
+                self._cache, cache)
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.scfg.temperature <= 0.0:
+            return logits.argmax(-1).astype(np.int32)
+        z = logits / self.scfg.temperature
+        z = z - z.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        return np.array([self._rng.choice(len(row), p=row) for row in p],
+                        np.int32)
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> None:
+        """One server tick: admit new work, decode the pool, retire done."""
+        self._admit()
+        if all(s is None for s in self._slots):
+            return
+        logits, self._cache = self._decode(
+            self.params, jnp.asarray(self._last_tok), self._cache)
+        toks = self._sample(np.asarray(logits))
+        for i, req in enumerate(self._slots):
+            if req is None:
+                continue
+            t = int(toks[i])
+            req.out_tokens.append(t)
+            self._last_tok[i, 0] = t
+            if (t == self.scfg.eos_token
+                    or len(req.out_tokens) >= req.max_new_tokens):
+                req.done = True
+                self._slots[i] = None
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while self._queue or any(s is not None for s in self._slots):
+            self.step()
+            ticks += 1
+            if ticks > max_ticks:
+                raise RuntimeError("server did not drain")
+        return sorted(self.requests.values(), key=lambda r: r.rid)

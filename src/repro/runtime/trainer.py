@@ -1,0 +1,132 @@
+"""Fault-tolerant training loop: checkpoint/restart, deterministic replay,
+straggler monitoring, elastic mesh restart.
+
+The recovery contract:
+  * batches are a pure function of ``(seed, step)`` (see repro.data), so a
+    restore at step k replays batch k exactly — no data loss or duplication;
+  * checkpoints are atomic and async (repro.checkpoint);
+  * on :class:`PreemptionError` (or any device error) the loop restores the
+    last checkpoint and continues — the same path a real cluster agent takes
+    after rescheduling;
+  * ``Trainer.resume_elastic`` restores the same checkpoint onto a *new*
+    mesh (different device count / topology) — elastic scaling.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.core.types import MeshConfig, ModelConfig, ParallelismConfig, ShapeConfig
+from repro.data.pipeline import LMDataConfig, lm_batch_for_step
+from repro.model.lm import Stepper
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.failures import FailureInjector, PreemptionError
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0      # step > factor×median -> straggler
+    max_recoveries: int = 100
+
+
+@dataclass
+class Trainer:
+    stepper: Stepper
+    data_cfg: LMDataConfig
+    cfg: TrainerConfig = field(default_factory=TrainerConfig)
+    injector: Optional[FailureInjector] = None
+    batch_fn: Optional[Callable[[Any, int], Dict[str, np.ndarray]]] = None
+
+    def __post_init__(self):
+        self.ckpt = CheckpointManager(self.cfg.ckpt_dir, keep=self.cfg.keep)
+        self._step_fn = jax.jit(self.stepper.train_fn(),
+                                donate_argnums=(0, 1))
+        self._step_times: List[float] = []
+        self.metrics_log: List[Dict[str, float]] = []
+        self.recoveries = 0
+        self.stragglers = 0
+
+    # ------------------------------------------------------------------ #
+    def _batch(self, step: int):
+        if self.batch_fn is not None:
+            return self.batch_fn(self.data_cfg, step)
+        return lm_batch_for_step(self.data_cfg, step)
+
+    def _init_state(self):
+        params, opt = self.stepper.init()
+        return {"params": params, "opt": opt}
+
+    def _try_restore(self, state):
+        latest = self.ckpt.latest()
+        if latest is None:
+            return 0, state
+        step, restored = self.ckpt.restore(state)
+        return step + 1, restored
+
+    # ------------------------------------------------------------------ #
+    def train(self) -> Dict[str, Any]:
+        """Run to total_steps, surviving injected/real failures."""
+        state = self._init_state()
+        step, state = self._try_restore(state)
+        while step < self.cfg.total_steps:
+            try:
+                step, state = self._run_span(step, state)
+            except PreemptionError:
+                self.recoveries += 1
+                if self.recoveries > self.cfg.max_recoveries:
+                    raise
+                self.ckpt.wait()
+                state = self._init_state()      # fresh process, fresh memory
+                step, state = self._try_restore(state)
+        self.ckpt.wait()
+        return {"state": state, "steps": step, "recoveries": self.recoveries,
+                "stragglers": self.stragglers, "metrics": self.metrics_log}
+
+    def _run_span(self, step: int, state):
+        while step < self.cfg.total_steps:
+            if self.injector is not None:
+                self.injector.maybe_fail(step)
+            batch = self._batch(step)
+            t0 = time.time()
+            params, opt, m = self._step_fn(state["params"], state["opt"],
+                                           batch)
+            jax.block_until_ready(m["loss"])
+            dt = time.time() - t0
+            state = {"params": params, "opt": opt}
+            self._watch_stragglers(dt)
+            if step % self.cfg.log_every == 0 or step == self.cfg.total_steps - 1:
+                self.metrics_log.append(
+                    {"step": step, "loss": float(m["loss"]),
+                     "gnorm": float(m.get("gnorm", 0.0)), "sec": dt})
+            if step % self.cfg.ckpt_every == 0 and step > 0:
+                self.ckpt.save_async(step, state)
+            step += 1
+        return step, state
+
+    def _watch_stragglers(self, dt: float) -> None:
+        self._step_times.append(dt)
+        hist = self._step_times[-50:]
+        if len(hist) >= 10:
+            med = float(np.median(hist))
+            if dt > self.cfg.straggler_factor * med:
+                self.stragglers += 1
+
+    # ------------------------------------------------------------------ #
+    def resume_elastic(self, new_stepper: Stepper,
+                       shardings: Optional[Any] = None):
+        """Restore the latest checkpoint onto a different mesh/stepper."""
+        state_like = {"params": new_stepper.init()[0], "opt": None}
+        params, opt = new_stepper.init()
+        like = {"params": params, "opt": opt}
+        step, restored = self.ckpt.restore(like, shardings)
+        return step + 1, restored

@@ -1,0 +1,46 @@
+import os
+import sys
+
+# Smoke tests must see 1 CPU device (the dry-run entrypoint sets its own
+# flags in-process); never force a device count here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.core.types import ParallelismConfig  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def par_f32():
+    """CPU-safe compute dtype (the container's XLA lacks some bf16 dots)."""
+    return ParallelismConfig(compute_dtype="float32")
+
+
+@pytest.fixture(scope="session")
+def par_f32_scan():
+    return ParallelismConfig(compute_dtype="float32", scan_layers=True)
+
+
+def make_batch(cfg, B, S, key=0, train=True):
+    """Standard smoke batch for any arch family."""
+    import jax.numpy as jnp
+
+    k0, k1 = jax.random.split(jax.random.PRNGKey(key))
+    if cfg.family == "lstm":
+        c = cfg.lstm
+        x = jax.random.normal(k0, (B, c.seq_len, c.in_features))
+        return {"x": x, "y": x.mean(axis=1) * 0.8}
+    tokens = jax.random.randint(k0, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if train:
+        batch["targets"] = tokens
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(
+            k1, (B, cfg.n_frontend_tokens, cfg.frontend_dim))
+    if cfg.frontend == "audio":
+        batch["frames"] = jax.random.normal(
+            k1, (B, cfg.encoder.n_positions, cfg.frontend_dim))
+    return batch

@@ -1,0 +1,57 @@
+"""Checkpointing: atomicity, GC, async, restore exactness."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (CheckpointManager, latest_step,
+                                   load_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": (jnp.ones((3,)), jnp.zeros((2, 2)))}}
+
+
+def test_roundtrip_exact(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t)
+    assert latest_step(str(tmp_path)) == 7
+    r = load_checkpoint(str(tmp_path), 7, jax.tree.map(np.asarray, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gc_keeps_last_k(tmp_path):
+    for s in range(6):
+        save_checkpoint(str(tmp_path), s, _tree(), keep=2)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000004", "step_00000005"]
+
+
+def test_tmp_dirs_never_visible_as_latest(tmp_path):
+    # a stale tmp dir (simulated crash) must not be picked up
+    os.makedirs(tmp_path / "step_00000099.tmp-123")
+    save_checkpoint(str(tmp_path), 1, _tree())
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_async_manager(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree(3)
+    m.save_async(4, t)
+    m.wait()
+    step, r = m.restore(jax.tree.map(np.asarray, t))
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"a": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), 0, {"a": jnp.ones((5,))})

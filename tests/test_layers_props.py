@@ -1,0 +1,109 @@
+"""Property tests on core layer invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.types import ModelConfig
+from repro.model.layers import (apply_norm, apply_rope, norm_schema,
+                                rope_angles, shard_axis)
+
+
+def _cfg(norm="rmsnorm"):
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                       n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                       norm=norm)
+
+
+@given(st.integers(1, 4), st.integers(2, 24), st.floats(0.5, 20))
+@settings(max_examples=25, deadline=None)
+def test_rmsnorm_scale_invariance(b, s, scale):
+    """rmsnorm(c·x) == rmsnorm(x) — the property QAT relies on."""
+    cfg = _cfg()
+    p = {"scale": jnp.ones((32,))}
+    x = jax.random.normal(jax.random.PRNGKey(b * 100 + s), (b, s, 32)) + 0.1
+    a = apply_norm(p, x, cfg)
+    bb = apply_norm(p, jnp.float32(scale) * x, cfg)
+    assert float(jnp.max(jnp.abs(a - bb))) < 1e-4
+
+
+@given(st.integers(0, 4000), st.integers(2, 16))
+@settings(max_examples=25, deadline=None)
+def test_rope_preserves_norm(pos0, hd_half):
+    hd = 2 * hd_half
+    pos = jnp.asarray([[pos0]])
+    cos, sin = rope_angles(pos, hd, 10_000.0)
+    x = jax.random.normal(jax.random.PRNGKey(pos0), (1, 1, 2, hd))
+    y = apply_rope(x, cos, sin)
+    nx = jnp.linalg.norm(x, axis=-1)
+    ny = jnp.linalg.norm(y, axis=-1)
+    assert float(jnp.max(jnp.abs(nx - ny))) < 1e-3
+
+
+def test_rope_relative_phase():
+    """q·k after rope depends only on relative distance."""
+    hd = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+
+    def dot_at(pq, pk):
+        cq, sq_ = rope_angles(jnp.asarray([[pq]]), hd, 10_000.0)
+        ck, sk_ = rope_angles(jnp.asarray([[pk]]), hd, 10_000.0)
+        return float(jnp.sum(apply_rope(q, cq, sq_)
+                             * apply_rope(k, ck, sk_)))
+
+    assert dot_at(7, 3) == pytest.approx(dot_at(104, 100), rel=1e-4)
+    assert dot_at(0, 0) == pytest.approx(dot_at(55, 55), rel=1e-4)
+
+
+@given(st.integers(1, 256), st.integers(1, 32))
+@settings(max_examples=50, deadline=None)
+def test_shard_axis_rule(n, tp):
+    ax = shard_axis(n, tp)
+    if ax == "model":
+        assert n % tp == 0 and n >= tp
+    else:
+        assert ax is None
+
+
+def test_layernorm_zero_mean_unit_var():
+    cfg = _cfg("layernorm")
+    p = {"scale": jnp.ones((32,)), "bias": jnp.zeros((32,))}
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 32)) * 5 + 3
+    y = apply_norm(p, x, cfg)
+    assert float(jnp.max(jnp.abs(y.mean(-1)))) < 1e-4
+    assert float(jnp.max(jnp.abs(y.std(-1) - 1))) < 1e-2
+
+
+def test_cross_entropy_uniform_logits():
+    from repro.model.lm import cross_entropy
+
+    B, S, V = 2, 5, 64
+    logits = jnp.zeros((B, S, V))
+    t = jax.random.randint(jax.random.PRNGKey(0), (B, S), 0, V)
+    loss, n = cross_entropy(logits, t)
+    assert float(loss) == pytest.approx(float(jnp.log(V)), rel=1e-5)
+    # masked positions drop out
+    t2 = t.at[:, 0].set(-1)
+    loss2, n2 = cross_entropy(logits, t2)
+    assert int(n2) == B * (S - 1)
+
+
+def test_chunked_ce_equals_dense():
+    from repro.model.lm import chunked_ce_loss, cross_entropy
+
+    B, S, D, V = 2, 24, 8, 32
+    h = jax.random.normal(jax.random.PRNGKey(0), (B, S, D))
+    w = jax.random.normal(jax.random.PRNGKey(1), (D, V))
+    t = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, V)
+    dense, _ = cross_entropy(h @ w, t)
+    import repro.model.lm as lm
+    old = lm.CE_CHUNK
+    lm.CE_CHUNK = 7  # force ragged chunking
+    try:
+        ck, _ = chunked_ce_loss(h, t, lambda hc: hc @ w)
+    finally:
+        lm.CE_CHUNK = old
+    assert float(jnp.abs(dense - ck)) < 1e-5

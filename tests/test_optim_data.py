@@ -1,0 +1,102 @@
+"""Optimizer, schedule, ZeRO sharding specs, data determinism, prefetch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.pipeline import (LMDataConfig, Prefetcher, lm_batch_for_step,
+                                 make_lm_iterator, traffic_flow_batch,
+                                 TrafficConfig)
+from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
+                               opt_state_schema, schedule)
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=5, total_steps=400,
+                      weight_decay=0.0, clip_norm=10.0)
+    target = jnp.asarray([[1.0, -2.0], [3.0, 0.5]])
+    params = {"w": jnp.zeros((2, 2))}
+    opt = init_opt_state(params)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(
+            lambda pp: jnp.sum((pp["w"] - target) ** 2))(p)
+        p2, o2, _ = adamw_update(g, o, p, cfg)
+        return p2, o2, loss
+
+    for _ in range(300):
+        params, opt, loss = step(params, opt)
+    assert float(loss) < 1e-3
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.int32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(schedule(cfg, jnp.int32(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_clip_bounds_update():
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((4, 4))}
+    opt = init_opt_state(params)
+    g = {"w": jnp.full((4, 4), 1e6)}
+    _, _, info = adamw_update(g, opt, params, cfg)
+    assert float(info["gnorm"]) > 1e6  # raw norm reported
+
+
+def test_zero_sharding_specs():
+    """Moments must pick up a data-axis shard on a dim that divides."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.types import SINGLE_POD
+    from repro.model.layers import PSpec
+
+    schema = {"w": PSpec((5120, 1024), P(None, "model")),
+              "tiny": PSpec((48,), P())}
+    opt = opt_state_schema(schema, SINGLE_POD)
+    assert opt["mu"]["w"].pspec == P("data", "model")
+    # 1-d stays replicated (PartitionSpec(None) ≡ PartitionSpec())
+    assert all(ax is None for ax in opt["mu"]["tiny"].pspec)
+
+
+@given(st.integers(0, 1000), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_data_deterministic_and_step_unique(s1, s2):
+    cfg = LMDataConfig(vocab_size=512, seq_len=16, global_batch=4, seed=1)
+    a = lm_batch_for_step(cfg, s1)
+    b = lm_batch_for_step(cfg, s1)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    if s1 != s2:
+        c = lm_batch_for_step(cfg, s2)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_targets_are_next_tokens():
+    cfg = LMDataConfig(vocab_size=512, seq_len=16, global_batch=4)
+    b = lm_batch_for_step(cfg, 0)
+    # structure is learnable: targets continue the stream
+    assert b["tokens"].shape == (4, 16)
+    assert b["targets"].shape == (4, 16)
+    assert (b["tokens"][:, 1:] == b["targets"][:, :-1]).all()
+
+
+def test_traffic_flow_shapes():
+    b = traffic_flow_batch(TrafficConfig(batch=8), 3)
+    assert b["x"].shape == (8, 6, 1)
+    assert b["y"].shape == (8, 1)
+    assert np.isfinite(b["x"]).all()
+
+
+def test_prefetcher_order():
+    cfg = LMDataConfig(vocab_size=128, seq_len=8, global_batch=2)
+    it = Prefetcher(iter([lm_batch_for_step(cfg, i) for i in range(5)]),
+                    depth=2)
+    got = [b["tokens"] for b in it]
+    assert len(got) == 5
+    for i, g in enumerate(got):
+        np.testing.assert_array_equal(g, lm_batch_for_step(cfg, i)["tokens"])

@@ -1,0 +1,110 @@
+"""Quantization: fixed-point properties (hypothesis), QAT training, int8 PTQ."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.quant.fixedpoint import (FxpFormat, fake_quant, fxp_quantize,
+                                    fxp_to_int, pick_frac_bits, quant_error)
+from repro.quant.ptq import (dequantize_params, int8_matmul_ref,
+                             quantize_params_int8)
+from repro.quant.qat import QATConfig, hard_sigmoid, hard_tanh
+
+
+@given(st.integers(4, 16), st.integers(0, 8),
+       st.floats(-100, 100, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_fxp_idempotent_and_bounded(total, frac, val):
+    """Quantization is idempotent and error ≤ resolution/2 inside range."""
+    frac = min(frac, total - 1)
+    fmt = FxpFormat(total, frac)
+    x = jnp.float32(val)
+    q1 = fxp_quantize(x, fmt)
+    q2 = fxp_quantize(q1, fmt)
+    assert float(jnp.abs(q1 - q2)) == 0.0
+    if abs(val) <= fmt.max_value:
+        assert float(jnp.abs(q1 - x)) <= fmt.resolution / 2 + 1e-7
+
+
+@given(st.integers(4, 16), st.integers(0, 8))
+@settings(max_examples=50, deadline=None)
+def test_fxp_int_codes_in_range(total, frac):
+    frac = min(frac, total - 1)
+    fmt = FxpFormat(total, frac)
+    x = jnp.linspace(-10, 10, 101)
+    codes = fxp_to_int(x, fmt)
+    assert int(codes.min()) >= fmt.lo
+    assert int(codes.max()) <= fmt.hi
+
+
+def test_pick_frac_bits_fits_amax():
+    for scale in [0.1, 0.9, 1.5, 7.9, 100.0]:
+        x = jnp.asarray([scale])
+        fb = pick_frac_bits(x, 8)
+        fmt = FxpFormat(8, fb)
+        assert fmt.max_value >= scale * 0.99, (scale, fb)
+
+
+def test_ste_gradient():
+    """Fake-quant is identity-gradient inside range, zero outside."""
+    fmt = FxpFormat(8, 4)
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, fmt)))(
+        jnp.asarray([0.5, 100.0, -100.0]))
+    assert g[0] == 1.0 and g[1] == 0.0 and g[2] == 0.0
+
+
+def test_hard_activations_close_to_smooth():
+    x = jnp.linspace(-1.2, 1.2, 100)
+    assert float(jnp.max(jnp.abs(hard_sigmoid(x) - jax.nn.sigmoid(x)))) < 0.06
+    assert float(jnp.max(jnp.abs(hard_tanh(x) - jnp.tanh(x)))) < 0.25
+
+
+def test_qat_lstm_trains(par_f32):
+    from repro.configs import get_config
+    from repro.model.layers import init_params
+    from repro.model.lstm import lstm_schema
+    from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+    from repro.quant.qat import make_qat_loss
+
+    cfg = get_config("elastic-lstm")
+    params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    loss_fn = make_qat_loss(cfg, QATConfig())
+    x = jax.random.normal(jax.random.PRNGKey(42), (256, 6, 1))
+    batch = {"x": x, "y": x.mean(axis=1) * 0.8}
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(lambda pp: loss_fn(pp, batch)[0])(p)
+        p2, o2, _ = adamw_update(g, o, p, ocfg)
+        return p2, o2, loss
+
+    first = None
+    for i in range(80):
+        params, opt, loss = step(params, opt)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.3
+
+
+def test_int8_ptq_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    ip = quantize_params_int8({"w": w})
+    wd = dequantize_params(ip, jnp.float32)["w"]
+    # per-channel error bounded by scale/2
+    err = jnp.abs(wd - w)
+    bound = ip.scale["w"].reshape(1, -1) * 0.5 + 1e-6
+    assert bool(jnp.all(err <= bound))
+
+
+def test_int8_matmul_error_scaling():
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 256))
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 64))
+    ip = quantize_params_int8({"w": w})
+    y = int8_matmul_ref(x, ip.q["w"], ip.scale["w"])
+    rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.02

@@ -1,0 +1,87 @@
+"""Collective parser + roofline math on handcrafted and real HLO."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.energy.meter import meter_channels
+from repro.energy.roofline import (_shape_bytes, parse_collectives, roofline)
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p = bf16[256,1024]{1,0} parameter(0)
+  %ar = bf16[256,1024]{1,0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[64,512]{1,0} all-gather(%x), replica_groups=[16,8]<=[128], dimensions={0}
+  %rs = f32[8,128]{1,0} reduce-scatter(%y), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %cp = bf16[32,32]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = f32[16,64]{1,0} all-to-all(%w), replica_groups={{0,1}}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[256,1024]") == 256 * 1024 * 2
+    assert _shape_bytes("f32[8]") == 32
+    assert _shape_bytes("(f32[4], bf16[2,2])") == 16 + 8
+
+
+def test_parse_collectives_counts_and_bytes():
+    stc = parse_collectives(HLO, 128)
+    assert stc.counts == {"all-reduce": 1, "all-gather": 1,
+                          "reduce-scatter": 1, "collective-permute": 1,
+                          "all-to-all": 1}
+    ar = 256 * 1024 * 2
+    assert stc.local_bytes["all-reduce"] == ar
+    # ring all-reduce over 4 devices: 2*S*(4-1)/4
+    assert abs(stc.wire_bytes["all-reduce"] - 2 * ar * 3 / 4) < 1
+    # all-gather out = 64*512*4 over group 8
+    ag_out = 64 * 512 * 4
+    assert abs(stc.wire_bytes["all-gather"] - ag_out * 7 / 8) < 1
+    # reduce-scatter out bytes × (n-1)
+    rs_out = 8 * 128 * 4
+    assert stc.wire_bytes["reduce-scatter"] == rs_out * 7
+    assert stc.wire_bytes["collective-permute"] == 32 * 32 * 2
+
+
+def test_async_start_not_double_counted():
+    hlo = """
+  %ars = (bf16[128,8]{1,0}, bf16[128,8]{1,0}) all-reduce-start(%p), replica_groups={{0,1}}
+  %ard = bf16[128,8]{1,0} all-reduce-done(%ars)
+"""
+    stc = parse_collectives(hlo, 2)
+    assert stc.counts == {"all-reduce": 1}
+    assert stc.local_bytes["all-reduce"] == 128 * 8 * 2
+
+
+def test_roofline_bottleneck_selection():
+    rep = roofline(arch="x", shape="y", mesh="m", n_devices=4,
+                   cost={"flops": 197e12, "bytes accessed": 1e9},
+                   hlo_text="", model_flops=4 * 197e12)
+    assert rep.bottleneck == "compute"
+    assert abs(rep.compute_s - 1.0) < 1e-9
+    assert abs(rep.mfu - 1.0) < 1e-6
+
+
+def test_meter_exact_dot_flops():
+    """The MXU channel must count 2·M·N·K for a plain matmul."""
+    M, K, N = 128, 256, 64
+
+    def f(a, b):
+        return a @ b
+
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+                         jax.ShapeDtypeStruct((K, N), jnp.float32)).compile()
+    ch = meter_channels(c.as_text(), 1)
+    assert abs(ch.work["mxu"] - 2 * M * N * K) / (2 * M * N * K) < 0.01
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(2, 16))
+@settings(max_examples=20, deadline=None)
+def test_wire_bytes_scale_with_group(m, n, g):
+    hlo = (f"%ar = f32[{m},{n}]{{1,0}} all-reduce(%p), "
+           f"replica_groups={{{{{','.join(str(i) for i in range(g))}}}}}")
+    stc = parse_collectives(hlo, 512)
+    expect = 2 * m * n * 4 * (g - 1) / g
+    assert abs(stc.wire_bytes["all-reduce"] - expect) < 1e-6

@@ -1,0 +1,96 @@
+"""The ElasticAI-Workflow 3-stage loop on the paper's LSTM, end to end."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.creator import Creator
+from repro.core.registry import validate_config
+from repro.core.report import DesignReport, compare
+from repro.core.workflow import Requirement, Workflow
+from repro.data.pipeline import TrafficConfig, traffic_flow_batch
+from repro.model.layers import init_params
+from repro.model.lstm import lstm_flops, lstm_schema
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.quant.fixedpoint import FxpFormat
+from repro.quant.qat import QATConfig, make_qat_lstm_apply, make_qat_loss
+
+
+def _train(knobs):
+    cfg = get_config("elastic-lstm")
+    qcfg = QATConfig(weight_fmt=FxpFormat(knobs["bits"], knobs["frac"]),
+                     act_fmt=FxpFormat(knobs["bits"], knobs["frac"] - 2))
+    params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    loss_fn = make_qat_loss(cfg, qcfg)
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=100,
+                      weight_decay=0.0)
+    batch = traffic_flow_batch(TrafficConfig(batch=128), 0)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(lambda pp: loss_fn(pp, batch)[0])(p)
+        p2, o2, _ = adamw_update(g, o, p, ocfg)
+        return p2, o2, loss
+
+    first = last = None
+    for i in range(60):
+        params, opt, loss = step(params, opt)
+        first = first if first is not None else float(loss)
+        last = float(loss)
+    ev = traffic_flow_batch(TrafficConfig(batch=128, seed=9), 1)
+    apply = make_qat_lstm_apply(cfg, qcfg)
+    pred, _ = apply(params, jnp.asarray(ev["x"]))
+    eval_loss = float(jnp.mean((pred - jnp.asarray(ev["y"])) ** 2))
+    rep = DesignReport(model="elastic-lstm", train_loss=last,
+                       eval_loss=eval_loss,
+                       weight_fmt=str(qcfg.weight_fmt),
+                       act_fmt=str(qcfg.act_fmt))
+    return params, rep, apply
+
+
+def _steps(knobs, params):
+    cfg = get_config("elastic-lstm")
+    apply = make_qat_lstm_apply(
+        cfg, QATConfig(weight_fmt=FxpFormat(knobs["bits"], knobs["frac"]),
+                       act_fmt=FxpFormat(knobs["bits"], knobs["frac"] - 2)))
+    x = jnp.asarray(traffic_flow_batch(TrafficConfig(batch=1), 0)["x"])
+    fn = lambda p, xx: apply(p, xx)[0]
+    return fn, (params, x), float(lstm_flops(cfg))
+
+
+def test_registry_validates_all():
+    assert "lstm" in validate_config(get_config("elastic-lstm"))
+    with pytest.raises(KeyError):
+        from repro.core import registry
+
+        registry.get("nonexistent-component")
+
+
+def test_workflow_loop_terminates_on_requirement():
+    wf = Workflow(creator=Creator(), train_fn=_train, step_builder=_steps)
+    req = Requirement(max_eval_loss=0.05, max_latency_s=10.0)
+
+    def optimizer(history):
+        k = dict(history[-1].knobs)
+        if k["bits"] >= 16:
+            return None
+        k["bits"] += 4
+        k["frac"] += 3
+        return k
+
+    hist = wf.run(req, optimizer, {"bits": 8, "frac": 6}, max_iters=3)
+    assert hist, "no iterations ran"
+    assert hist[-1].satisfied or len(hist) == 3
+    # estimation and measurement exist and are comparable (Table-I shape)
+    rec = hist[-1]
+    assert rec.synthesis.est_latency_s > 0
+    assert rec.measurement.latency_s > 0
+    assert "latency_rel_err" in rec.est_vs_meas
+
+
+def test_lstm_flops_matches_paper_scale():
+    """Table I implies ~21.7 kOP/inference; our counted graph must agree."""
+    flops = lstm_flops(get_config("elastic-lstm"))
+    assert 15_000 < flops < 30_000, flops
