@@ -16,12 +16,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.energy.hw import TPU_V5E
-from repro.energy.roofline import parse_collectives
+from repro.energy.roofline import normalize_cost, parse_collectives
 
 
 def _cost(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
-    ca = c.cost_analysis()
+    ca = normalize_cost(c.cost_analysis())
     return float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0)), c
 
 

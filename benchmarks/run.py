@@ -29,6 +29,38 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("RTL codegen: generated accelerator vs Table-I XC7S15 numbers")
+    print("=" * 72)
+    import jax as _jax
+
+    from repro.configs import get_config as _get
+    from repro.core.creator import Creator
+    from repro.core.types import SHAPES_LSTM
+    from repro.energy.hw import XC7S15
+    from repro.model.lstm import lstm_flops
+
+    _cr = Creator(hw=XC7S15)
+    _st = _cr.build(_get("elastic-lstm"), SHAPES_LSTM["infer_1"])
+    _flops = float(lstm_flops(_get("elastic-lstm")))
+    _syn, _exe = _cr.translate(_st, backend="rtl", model_flops=_flops)
+    _x = _jax.random.normal(_jax.random.PRNGKey(0), (1, 6, 1))
+    _exe(_x)                       # warm the emulator
+    emu_us = _timeit(lambda: _jax.block_until_ready(_exe(_x)), n=5)
+    _meas = _cr.measure_rtl(_exe, _x, model="elastic-lstm",
+                            model_flops=_flops)
+    print(f"artifacts: {_syn.n_artifacts}  cycles: "
+          f"{_syn.resources['cycles']}  est: {_syn.est_latency_s*1e6:.2f} us "
+          f"@ {_syn.est_power_w*1e3:.1f} mW -> {_syn.est_gop_per_j:.2f} GOP/J"
+          f"  (Table I meas: 57.25 us @ 71.0 mW -> 5.33 GOP/J)")
+    print(f"resources: dsp={_syn.resources['dsp']}/20 "
+          f"bram36={_syn.resources['bram36']}/10 "
+          f"lut={_syn.resources['lut']}/8000  fits={_syn.fits}")
+    rows.append(("rtl_codegen", emu_us,
+                 f"gop_per_j={_meas.gop_per_j:.2f}_vs_table1_5.33_"
+                 f"err={(_meas.gop_per_j-5.33)/5.33:+.1%}"))
+
+    print()
+    print("=" * 72)
     print("RTL-template vs HLS analogue (Pallas templates vs plain XLA)")
     print("=" * 72)
     from benchmarks import rtl_vs_hls
@@ -45,10 +77,14 @@ def main() -> None:
     print("=" * 72)
     print("MoE EP dispatch (8-device host mesh)")
     print("=" * 72)
-    from benchmarks import moe_dispatch
+    try:
+        from benchmarks import moe_dispatch
 
-    moe_dispatch.run()
-    rows.append(("moe_dispatch", 0.0, "see table above"))
+        moe_dispatch.run()
+        rows.append(("moe_dispatch", 0.0, "see table above"))
+    except Exception as e:  # needs shard_map-era jax + host devices
+        print(f"moe_dispatch skipped: {type(e).__name__}: {e}")
+        rows.append(("moe_dispatch", 0.0, "skipped(env)"))
 
     print()
     print("=" * 72)

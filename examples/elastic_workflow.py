@@ -3,7 +3,13 @@ traffic-flow LSTM — design/QAT-train -> translate+estimate -> deploy+measure,
 with the feedback loop widening the fixed-point format until the requirement
 is met (what the PerCom audience would do interactively).
 
-    PYTHONPATH=src python examples/elastic_workflow.py
+    PYTHONPATH=src python examples/elastic_workflow.py            # XLA loop
+    PYTHONPATH=src python examples/elastic_workflow.py --backend rtl
+
+With ``--backend rtl`` the loop's stage 2/3 run against the *generated
+accelerator*: template artifacts are emitted and the bit-exact emulator's
+cycle schedule provides the measurement. Either way, the script finishes by
+"pressing the button" — translating the final design to RTL artifacts.
 """
 import jax
 import jax.numpy as jnp
@@ -77,8 +83,34 @@ def optimizer(history):
 
 
 def main():
-    wf = Workflow(creator=Creator(), train_fn=train_fn,
-                  step_builder=step_builder)
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=["xla", "rtl"], default="xla")
+    backend = ap.parse_args().backend
+    from repro.core.types import SHAPES_LSTM
+    from repro.energy.hw import XC7S15
+
+    cfg = get_config("elastic-lstm")
+    creator = Creator(hw=XC7S15) if backend == "rtl" else Creator()
+
+    def stepper_builder(knobs):
+        return creator.build(cfg, SHAPES_LSTM["infer_1"])
+
+    def fmt_builder(knobs):
+        # clamp to the RTL exactness envelope (DESIGN.md §4): the DSP path
+        # caps weights at 12 bits and LUT inputs at 9
+        wb = min(knobs["bits"], 12)
+        ab = min(knobs["bits"], 9)
+        return {"w_fmt": FxpFormat(wb, min(knobs["frac"], wb - 1)),
+                "act_fmt": FxpFormat(
+                    ab, min(max(0, knobs["frac"] - 2), ab - 1, 8))}
+
+    wf = Workflow(creator=creator, train_fn=train_fn,
+                  step_builder=step_builder, backend=backend,
+                  stepper_builder=stepper_builder if backend == "rtl"
+                  else None,
+                  fmt_builder=fmt_builder if backend == "rtl" else None)
     req = Requirement(max_eval_loss=0.01, max_latency_s=1.0)
     hist = wf.run(req, optimizer, {"bits": 4, "frac": 2}, max_iters=4)
     print(f"\n{'it':>3} {'fmt':>7} {'eval':>8} {'est_ms':>8} {'meas_ms':>8} "
@@ -93,6 +125,20 @@ def main():
               f"{'Y' if r.satisfied else 'n':>3}")
     print("\nworkflow finished:",
           "requirement met" if hist[-1].satisfied else "budget exhausted")
+
+    # --- "press the button": translate the final design to RTL ----------- #
+    best = hist[-1].knobs
+    params, _, _ = train_fn(best)
+    st = Creator(hw=XC7S15).build(cfg, SHAPES_LSTM["infer_1"])
+    syn, exe = Creator(hw=XC7S15).translate(
+        st, backend="rtl", params=params, **fmt_builder(best))
+    print(f"\nRTL translate: {syn.n_artifacts} artifacts, "
+          f"{syn.resources['cycles']} cycles "
+          f"({syn.est_latency_s*1e6:.2f} us @ 100 MHz), "
+          f"dsp={syn.resources['dsp']} bram36={syn.resources['bram36']} "
+          f"lut={syn.resources['lut']}, fits={syn.fits}")
+    for name in sorted(exe.artifacts):
+        print(f"  - {name}")
 
 
 if __name__ == "__main__":

@@ -51,8 +51,35 @@ class Creator:
     # Stage 2: translate (= synthesize) + estimation report
     # ------------------------------------------------------------------ #
     def translate(self, st: Stepper, *, kind: Optional[str] = None,
-                  model_flops: Optional[float] = None):
-        """Returns (SynthesisReport, compiled_executable)."""
+                  model_flops: Optional[float] = None,
+                  backend: str = "xla", params=None, **rtl_formats):
+        """Returns (SynthesisReport, compiled_executable).
+
+        ``backend="xla"`` (default) lowers through jit/XLA against the TPU
+        HWSpec.  ``backend="rtl"`` runs the ElasticAI-Creator codegen
+        analogue instead: lower to the fixed-point dataflow IR, emit the
+        VHDL-like template artifacts, and return an
+        :class:`~repro.rtl.backend.RTLExecutable` whose bit-exact integer
+        emulator stands in for the deployed accelerator. ``params`` (trained
+        weights) and Q-format kwargs (``w_fmt``/``act_fmt``/``state_fmt``)
+        are only meaningful for the RTL backend.
+        """
+        if backend == "rtl":
+            from repro.energy.hw import XC7S15
+            from repro.rtl.backend import translate_rtl
+
+            if params is None:
+                params, _ = st.init()
+            if model_flops is None:
+                from repro.launch.dryrun import model_flops_estimate
+
+                model_flops = model_flops_estimate(st.cfg, st.shape)
+            hw = self.hw if self.hw.clock_hz else XC7S15
+            return translate_rtl(st.cfg, params, hw=hw,
+                                 model_flops=model_flops, **rtl_formats)
+        if backend != "xla":
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"expected 'xla' or 'rtl'")
         kind = kind or st.shape.kind
         abstract = st.abstract_inputs()
         if st.mesh is not None:
@@ -171,3 +198,14 @@ class Creator:
             latency_s=lat, power_w=hw.active_w, energy_j=energy,
             gop_per_j=(model_flops / 1e9) / energy if energy else 0.0,
             n_runs=n_runs)
+
+    def measure_rtl(self, exe, x, *, model: str, model_flops: float,
+                    hw: Optional[HWSpec] = None) -> MeasurementReport:
+        """Stage 3 for the RTL backend: execute the bit-exact emulator (the
+        deployed accelerator's proxy) and read latency/power off its
+        cycle-accurate schedule — emulator cycles × clock, duty-cycled
+        power via :meth:`HWSpec.energy_j`."""
+        from repro.rtl.backend import measure_rtl
+
+        return measure_rtl(exe, x, model=model, model_flops=model_flops,
+                           hw=hw)

@@ -55,6 +55,10 @@ class SynthesisReport:
     channels: Dict[str, float] = field(default_factory=dict)  # per-region s
     channel_joules: Dict[str, float] = field(default_factory=dict)
     compile_seconds: float = 0.0
+    # RTL backend extras (backend="xla" reports leave these at defaults)
+    backend: str = "xla"
+    resources: Dict[str, float] = field(default_factory=dict)  # dsp/bram/lut
+    n_artifacts: int = 0             # emitted template files (rtl only)
 
     def to_json(self) -> str:
         return json.dumps(asdict(self), indent=2)

@@ -70,11 +70,18 @@ class Workflow:
     train_fn: Callable[[Dict[str, Any]], Tuple[Any, DesignReport, Any]]
     step_builder: Callable[[Dict[str, Any], Any], Tuple[Any, tuple, float]]
     stepper_builder: Optional[Callable[[Dict[str, Any]], Any]] = None
+    # "xla" measures the jitted step on the container; "rtl" runs the
+    # codegen backend: template artifacts + cycle-accurate emulator
+    # (requires stepper_builder; fmt_builder maps knobs -> Q-format kwargs).
+    backend: str = "xla"
+    fmt_builder: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None
     history: List[WorkflowRecord] = field(default_factory=list)
 
     def run_once(self, knobs: Dict[str, Any], it: int = 0) -> WorkflowRecord:
         # Stage 1 — design / train / quantize
         params, design, _ = self.train_fn(knobs)
+        if self.backend == "rtl":
+            return self._run_once_rtl(knobs, it, params, design)
         # Stage 2 — translate + estimate
         if self.stepper_builder is not None:
             st = self.stepper_builder(knobs)
@@ -87,6 +94,24 @@ class Workflow:
         meas = self.creator.measure(jax.jit(fn), args,
                                     model=design.model,
                                     model_flops=model_flops)
+        rec = WorkflowRecord(
+            iteration=it, knobs=dict(knobs), design=design, synthesis=syn,
+            measurement=meas, est_vs_meas=compare(syn, meas),
+            satisfied=False)
+        self.history.append(rec)
+        return rec
+
+    def _run_once_rtl(self, knobs, it, params, design) -> WorkflowRecord:
+        """Stages 2+3 against the generated accelerator instead of XLA."""
+        assert self.stepper_builder is not None, \
+            "backend='rtl' needs stepper_builder (the model to lower)"
+        st = self.stepper_builder(knobs)
+        fmts = self.fmt_builder(knobs) if self.fmt_builder else {}
+        syn, exe = self.creator.translate(st, backend="rtl", params=params,
+                                          **fmts)
+        _, args, model_flops = self.step_builder(knobs, params)
+        meas = self.creator.measure_rtl(exe, args[-1], model=design.model,
+                                        model_flops=model_flops)
         rec = WorkflowRecord(
             iteration=it, knobs=dict(knobs), design=design, synthesis=syn,
             measurement=meas, est_vs_meas=compare(syn, meas),

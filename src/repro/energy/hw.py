@@ -21,6 +21,7 @@ class HWSpec:
     active_w: float              # power while computing (ASSUMPTION for v5e)
     idle_w: float                # power while gated/idle
     mxu_align: int = 128         # matmul tile alignment
+    clock_hz: float = 0.0        # fabric clock (FPGA targets; 0 for TPU)
 
     def energy_j(self, seconds: float, duty: float = 1.0) -> float:
         return seconds * (self.active_w * duty + self.idle_w * (1 - duty))
@@ -48,4 +49,5 @@ XC7S15 = HWSpec(
     hbm_bytes=45 * 1024,
     active_w=0.071,              # Table I: 71 mW measured
     idle_w=0.010,
+    clock_hz=100e6,              # Table I: 100 MHz fabric clock
 )

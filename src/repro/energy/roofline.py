@@ -127,6 +127,14 @@ def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
     return st
 
 
+def normalize_cost(cost) -> Dict[str, float]:
+    """jax's ``Compiled.cost_analysis()`` returned ``[dict]`` per-partition in
+    older releases and a bare dict in newer ones — accept both, everywhere."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 @dataclass
 class RooflineReport:
     arch: str
@@ -159,6 +167,7 @@ def roofline(
     cost: Dict[str, float], hlo_text: str, model_flops: float,
     hw: HWSpec = TPU_V5E, memory_analysis: str = "",
 ) -> RooflineReport:
+    cost = normalize_cost(cost)
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     coll = parse_collectives(hlo_text, n_devices)

@@ -72,7 +72,10 @@ def _compile_cell(cfg, shape, mcfg, mesh, par):
                          in_shardings=(param_sh, bsh))
             lowered = fn.lower(abstract["params"], ab)
             compiled = lowered.compile()
-        return (compiled.cost_analysis(), compiled.memory_analysis(),
+        from repro.energy.roofline import normalize_cost
+
+        return (normalize_cost(compiled.cost_analysis()),
+                compiled.memory_analysis(),
                 compiled.as_text(), time.time() - t0)
 
     with mesh:
@@ -97,8 +100,10 @@ def _compile_cell(cfg, shape, mcfg, mesh, par):
                                abstract["cache"])
         compiled = lowered.compile()
     dt = time.time() - t0
-    return (compiled.cost_analysis(), compiled.memory_analysis(),
-            compiled.as_text(), dt)
+    from repro.energy.roofline import normalize_cost
+
+    return (normalize_cost(compiled.cost_analysis()),
+            compiled.memory_analysis(), compiled.as_text(), dt)
 
 
 def extrapolation_plan(cfg):

@@ -65,6 +65,31 @@ def fxp_to_int(x: jax.Array, fmt: FxpFormat) -> jax.Array:
     return q.astype(dtype)
 
 
+def fxp_requant_int(v: jax.Array, from_frac: int, fmt: FxpFormat) -> jax.Array:
+    """Integer-domain rescale: the exact counterpart of ``fxp_quantize``.
+
+    ``v`` holds integer codes at scale ``2**from_frac``; the result holds the
+    codes of ``fxp_quantize(v / 2**from_frac, fmt)`` at scale
+    ``2**fmt.frac_bits`` — same round-to-nearest-even and saturation, computed
+    entirely in int32 (a shift + comparator, which is what the RTL emits).
+    Exactness holds whenever ``|v| < 2**24`` so the float reference's f32
+    arithmetic is itself exact (see DESIGN.md §4).
+    """
+    v = v.astype(jnp.int32)
+    s = from_frac - fmt.frac_bits
+    if s > 0:                       # narrow: round-half-even right shift
+        q0 = jax.lax.shift_right_arithmetic(v, s)
+        rem = v - jax.lax.shift_left(q0, s)
+        half = 1 << (s - 1)
+        inc = (rem > half) | ((rem == half) & ((q0 & 1) == 1))
+        q = q0 + inc.astype(jnp.int32)
+    elif s < 0:                     # widen: exact left shift
+        q = jax.lax.shift_left(v, -s)
+    else:
+        q = v
+    return jnp.clip(q, fmt.lo, fmt.hi)
+
+
 @jax.custom_vjp
 def fxp_fake_quant(x: jax.Array, scale: jax.Array, lo: float, hi: float):
     q = jnp.clip(jnp.round(x * scale), lo, hi)

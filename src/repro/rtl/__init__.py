@@ -1,0 +1,21 @@
+"""RTL backend — the ElasticAI-Creator codegen analogue (DESIGN.md §3).
+
+Pipeline:  quantized model ──lower──▶ fixed-point dataflow IR (``ir``)
+           ──instantiate──▶ VHDL-like template artifacts (``templates``,
+           ``emit``) ──verify──▶ bit-exact int32 emulator (``emulator``)
+           ──cost──▶ XC7S15 resource/cycle model (``resources``).
+
+Entry point for users: ``Creator.translate(st, backend="rtl")``; the pieces
+are importable here for direct use and tests.
+"""
+from repro.rtl.backend import (RTLExecutable, measure_rtl,  # noqa: F401
+                               translate_rtl)
+from repro.rtl.emit import emit_graph, write_artifacts  # noqa: F401
+from repro.rtl.emulator import (RTLEmulator, assert_bit_exact,  # noqa: F401
+                                reference_apply)
+from repro.rtl.ir import (ActApplyNode, ActLUTNode,  # noqa: F401
+                          ElementwiseNode, Edge, Graph, LinearNode,
+                          LSTMCellNode, lower_linear_stack, lower_model,
+                          validate_formats)
+from repro.rtl.resources import (NodeCost, ResourceReport,  # noqa: F401
+                                 estimate, node_cost, synthesize)

@@ -1,0 +1,89 @@
+"""The "press the button" entry point: model -> artifacts + report + emulator.
+
+``translate_rtl`` is what ``Creator.translate(st, backend="rtl")`` delegates
+to: lower the quantized model to the dataflow IR, instantiate the hardware
+templates, cost the design against the FPGA HWSpec, and hand back an
+:class:`RTLExecutable` whose emulator stands in for the deployed accelerator
+in the Workflow's stage-3 measurement (cycles × clock, duty-cycled power).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+
+from repro.core.report import MeasurementReport
+from repro.core.types import ModelConfig
+from repro.energy.hw import HWSpec, XC7S15
+from repro.quant.fixedpoint import FxpFormat
+from repro.rtl.emit import emit_graph
+from repro.rtl.emulator import RTLEmulator
+from repro.rtl.ir import Graph, lower_model
+from repro.rtl.resources import estimate, synthesize
+
+
+@dataclass
+class RTLExecutable:
+    """The compiled-artifact analogue returned by ``translate(backend="rtl")``.
+
+    Callable like the jitted executables the XLA backend returns: feeding it a
+    float batch runs the bit-exact emulator and yields dequantized outputs.
+    """
+
+    graph: Graph
+    artifacts: Dict[str, str]
+    hw: HWSpec
+    emulator: RTLEmulator = field(init=False)
+
+    def __post_init__(self):
+        self.emulator = RTLEmulator(self.graph)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.emulator.run(x).outputs_f
+
+    @property
+    def cycles(self) -> int:
+        return estimate(self.graph,
+                        clock_hz=self.hw.clock_hz or 100e6).cycles
+
+    def save(self, build_dir: str) -> None:
+        from repro.rtl.emit import write_artifacts
+
+        write_artifacts(self.artifacts, build_dir)
+
+
+def translate_rtl(cfg: ModelConfig, params, *,
+                  hw: HWSpec = XC7S15,
+                  w_fmt: FxpFormat = FxpFormat(8, 6),
+                  act_fmt: FxpFormat = FxpFormat(8, 4),
+                  state_fmt: FxpFormat = FxpFormat(16, 8),
+                  model_flops: float = 0.0):
+    """Returns (SynthesisReport, RTLExecutable)."""
+    graph = lower_model(cfg, params, w_fmt=w_fmt, act_fmt=act_fmt,
+                        state_fmt=state_fmt)
+    artifacts = emit_graph(graph)
+    rep = synthesize(graph, hw=hw, model_flops=model_flops,
+                     n_artifacts=len(artifacts))
+    return rep, RTLExecutable(graph=graph, artifacts=artifacts, hw=hw)
+
+
+def measure_rtl(exe: RTLExecutable, x: jax.Array, *, model: str,
+                model_flops: float, hw: Optional[HWSpec] = None
+                ) -> MeasurementReport:
+    """Stage-3 for the RTL backend: run the emulator (the deployed-design
+    proxy), then read latency/power off the cycle-accurate schedule."""
+    hw = hw or exe.hw
+    clock = hw.clock_hz or 100e6
+    rr = estimate(exe.graph, clock_hz=clock)
+    out = exe(x)                              # actually execute the design
+    jax.block_until_ready(out)
+    latency = rr.latency_s
+    energy = hw.energy_j(latency, duty=rr.duty)
+    return MeasurementReport(
+        model=model, platform=f"rtl-emulator({hw.name})",
+        latency_s=latency,
+        power_w=energy / latency if latency else 0.0,
+        energy_j=energy,
+        gop_per_j=(model_flops / 1e9) / energy if energy else 0.0,
+        n_runs=1)

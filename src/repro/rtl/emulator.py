@@ -1,0 +1,261 @@
+"""Bit-exact integer emulator of the emitted RTL — the backend's verifier.
+
+Every IR node's integer semantics (DESIGN.md §4) are implemented twice:
+
+* :func:`reference_apply` — the float oracle, built *only* from
+  ``fxp_quantize`` / the hard activations, i.e. the semantics the QAT stage
+  trains against;
+* :class:`RTLEmulator` — vectorized int32 arithmetic (what the DSP slices
+  compute), with a Pallas kernel for the hot LSTM-cell MAC loop.
+
+The contract is exact equality, integer for integer, not a tolerance:
+``emulator.run(x)`` must satisfy ``y_int == round(reference_apply(x) * 2**f)``
+for every sample. This holds by construction for the LUTs (tables are
+generated from the float reference) and by the round-half-even shift
+(``fxp_requant_int``) everywhere else, provided formats pass
+``ir.validate_formats`` — the same envelope that keeps int32 from
+overflowing keeps the f32 oracle exact.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import use_interpret
+from repro.quant.fixedpoint import (FxpFormat, fxp_quantize, fxp_requant_int,
+                                    fxp_to_int)
+from repro.quant.qat import hard_sigmoid, hard_tanh
+from repro.rtl.ir import (ActApplyNode, ActLUTNode, ElementwiseNode, Graph,
+                          LinearNode, LSTMCellNode)
+
+# --------------------------------------------------------------------------- #
+# Pallas template: the gate MAC (int matmul + bias + requant + saturate)
+# --------------------------------------------------------------------------- #
+
+
+def _mac_kernel(xh_ref, w_ref, b_ref, o_ref, *, shift: int, lo: int, hi: int):
+    acc = jax.lax.dot_general(
+        xh_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc = acc + b_ref[...]
+    # same requant primitive as the jnp path — one rounding implementation
+    q = fxp_requant_int(acc, shift, FxpFormat(32, 0))
+    o_ref[...] = jnp.clip(q, lo, hi)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "lo", "hi",
+                                             "interpret"))
+def mac_int_pallas(xh: jax.Array, w: jax.Array, b: jax.Array, *,
+                   shift: int, lo: int, hi: int,
+                   interpret: bool = True) -> jax.Array:
+    """(B, K) int32 @ (K, N) int32 + b, requantized: one template invocation."""
+    from jax.experimental import pallas as pl
+
+    B, _ = xh.shape
+    N = w.shape[1]
+    return pl.pallas_call(
+        functools.partial(_mac_kernel, shift=shift, lo=lo, hi=hi),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.int32),
+        interpret=interpret,
+    )(xh, w, b.reshape(1, -1))
+
+
+def _mac_int_jnp(xh, w, b, *, shift, lo, hi):
+    acc = jax.lax.dot_general(xh, w, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32) + b
+    return jnp.clip(fxp_requant_int(acc, shift, FxpFormat(32, 0)), lo, hi)
+
+
+# --------------------------------------------------------------------------- #
+# Integer emulator
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class EmulationResult:
+    outputs: jax.Array               # int codes of the design's output edge
+    outputs_f: jax.Array             # dequantized
+    trace: Dict[str, jax.Array]      # per-edge int codes
+
+
+class RTLEmulator:
+    """Runs the emitted design on integer inputs, batch-vectorized."""
+
+    def __init__(self, graph: Graph, use_pallas: bool = True):
+        self.graph = graph
+        self.use_pallas = use_pallas
+        self._interpret = use_interpret()
+        self._luts = {n.name: jnp.asarray(n.table(), jnp.int32)
+                      for n in graph.nodes if isinstance(n, ActLUTNode)}
+        self._lut_nodes = {n.name: n for n in graph.nodes
+                           if isinstance(n, ActLUTNode)}
+
+    # -- primitive schedules -------------------------------------------------
+    def _mac(self, xh, w, b, *, shift, fmt: FxpFormat):
+        if self.use_pallas:
+            return mac_int_pallas(xh, w, b, shift=shift, lo=fmt.lo,
+                                  hi=fmt.hi, interpret=self._interpret)
+        return _mac_int_jnp(xh, w, b, shift=shift, lo=fmt.lo, hi=fmt.hi)
+
+    def _lookup(self, lut_name: str, codes: jax.Array) -> jax.Array:
+        node = self._lut_nodes[lut_name]
+        return jnp.take(self._luts[lut_name], codes - node.in_fmt.lo)
+
+    def _linear(self, n: LinearNode, x_int: jax.Array) -> jax.Array:
+        w = jnp.asarray(n.weight_int(), jnp.int32)
+        b = jnp.asarray(n.bias_int(), jnp.int32)
+        shift = n.in_fmt.frac_bits + n.w_fmt.frac_bits - n.out_fmt.frac_bits
+        return self._mac(x_int.astype(jnp.int32), w, b, shift=shift,
+                         fmt=n.out_fmt)
+
+    def _lstm_cell(self, n: LSTMCellNode, x_int: jax.Array) -> jax.Array:
+        B = x_int.shape[0]
+        A, C = n.act_fmt, n.state_fmt
+        af, wf, cf = A.frac_bits, n.w_fmt.frac_bits, C.frac_bits
+        H = n.hidden
+        w = jnp.asarray(n.weight_int(), jnp.int32)
+        b = jnp.asarray(n.bias_int(), jnp.int32)
+        h = jnp.zeros((B, H), jnp.int32)
+        c = jnp.zeros((B, H), jnp.int32)
+        outs = []
+        for t in range(n.seq_len):
+            xh = jnp.concatenate([x_int[:, t].astype(jnp.int32), h], axis=-1)
+            z = self._mac(xh, w, b, shift=wf, fmt=A)       # acc -> act fmt
+            i, f, g, o = jnp.split(z, 4, axis=-1)
+            si = self._lookup(n.sigmoid_lut, i)
+            sf = self._lookup(n.sigmoid_lut, f)
+            so = self._lookup(n.sigmoid_lut, o)
+            tg = self._lookup(n.tanh_lut, g)
+            # align si*tg (scale 2·af) to sf*c (scale af+cf): << (cf - af)
+            term = sf * c + jax.lax.shift_left(si * tg, cf - af)
+            c = fxp_requant_int(term, af + cf, C)
+            c_a = fxp_requant_int(c, cf, A)
+            tc = self._lookup(n.tanh_lut, c_a)
+            h = fxp_requant_int(so * tc, 2 * af, A)
+            outs.append(h)
+        return jnp.stack(outs, axis=1)                     # (B, S, H)
+
+    def _elementwise(self, n: ElementwiseNode, a, b) -> jax.Array:
+        fa, fb = n.a_fmt.frac_bits, n.b_fmt.frac_bits
+        a = a.astype(jnp.int32)
+        b = b.astype(jnp.int32)
+        if n.kind == "mul":
+            return fxp_requant_int(a * b, fa + fb, n.out_fmt)
+        hi = max(fa, fb)
+        a = jax.lax.shift_left(a, hi - fa)
+        b = jax.lax.shift_left(b, hi - fb)
+        return fxp_requant_int(a + b, hi, n.out_fmt)
+
+    # -- graph walk ----------------------------------------------------------
+    def run_int(self, x_int: jax.Array) -> EmulationResult:
+        g = self.graph
+        env: Dict[str, jax.Array] = {g.inputs[0]: jnp.asarray(x_int)}
+        for n in g.nodes:
+            if isinstance(n, ActLUTNode):
+                continue
+            src = env[n.inputs[0]]
+            if isinstance(n, LSTMCellNode):
+                # a stacked cell consumes the previous cell's full sequence
+                src = env.get(n.inputs[0] + ".seq", src)
+                seq = self._lstm_cell(n, src)
+                env[n.outputs[0]] = seq[:, -1]
+                env[n.outputs[0] + ".seq"] = seq
+            elif isinstance(n, LinearNode):
+                env[n.outputs[0]] = self._linear(n, src)
+            elif isinstance(n, ActApplyNode):
+                env[n.outputs[0]] = self._lookup(n.lut, src)
+            elif isinstance(n, ElementwiseNode):
+                env[n.outputs[0]] = self._elementwise(
+                    n, src, env[n.inputs[1]])
+        out_edge = g.edges[g.outputs[0]]
+        y = env[g.outputs[0]]
+        return EmulationResult(outputs=y,
+                               outputs_f=y.astype(jnp.float32)
+                               / out_edge.fmt.scale,
+                               trace=env)
+
+    def run(self, x: jax.Array) -> EmulationResult:
+        in_fmt = self.graph.edges[self.graph.inputs[0]].fmt
+        return self.run_int(
+            jnp.asarray(fxp_to_int(x, in_fmt), jnp.int32))
+
+
+# --------------------------------------------------------------------------- #
+# Float oracle: identical semantics expressed with fxp_quantize only
+# --------------------------------------------------------------------------- #
+
+
+def _q(x, fmt: FxpFormat):
+    return fxp_quantize(x, fmt)
+
+
+def _ref_bias(b, in_fmt: FxpFormat, w_fmt: FxpFormat):
+    return _q(b, FxpFormat(32, in_fmt.frac_bits + w_fmt.frac_bits))
+
+
+def reference_apply(graph: Graph, x: jax.Array) -> jax.Array:
+    """The fxp_quantize reference the emulator must match bit-for-bit."""
+    env = {graph.inputs[0]:
+           _q(x, graph.edges[graph.inputs[0]].fmt)}
+    luts = {n.name: n for n in graph.nodes if isinstance(n, ActLUTNode)}
+
+    def act(node: ActLUTNode, v):
+        fn = hard_sigmoid if node.kind == "hard_sigmoid" else hard_tanh
+        return _q(fn(_q(v, node.in_fmt)), node.out_fmt)
+
+    for n in graph.nodes:
+        if isinstance(n, ActLUTNode):
+            continue
+        src = env[n.inputs[0]]
+        if isinstance(n, LinearNode):
+            wq = _q(jnp.asarray(n.weight), n.w_fmt)
+            bq = _ref_bias(jnp.asarray(n.bias), n.in_fmt, n.w_fmt)
+            env[n.outputs[0]] = _q(src @ wq + bq, n.out_fmt)
+        elif isinstance(n, LSTMCellNode):
+            src = env.get(n.inputs[0] + ".seq", src)
+            A, C = n.act_fmt, n.state_fmt
+            sig, tanh = luts[n.sigmoid_lut], luts[n.tanh_lut]
+            wq = _q(jnp.asarray(n.weight), n.w_fmt)
+            bq = _ref_bias(jnp.asarray(n.bias), A, n.w_fmt)
+            B = src.shape[0]
+            h = jnp.zeros((B, n.hidden), jnp.float32)
+            c = jnp.zeros((B, n.hidden), jnp.float32)
+            outs = []
+            for t in range(n.seq_len):
+                z = _q(jnp.concatenate([src[:, t], h], axis=-1) @ wq + bq, A)
+                i, f, g, o = jnp.split(z, 4, axis=-1)
+                si, sf, so = act(sig, i), act(sig, f), act(sig, o)
+                tg = act(tanh, g)
+                c = _q(sf * c + si * tg, C)
+                h = _q(so * act(tanh, _q(c, A)), A)
+                outs.append(h)
+            env[n.outputs[0]] = h
+            env[n.outputs[0] + ".seq"] = jnp.stack(outs, axis=1)
+        elif isinstance(n, ActApplyNode):
+            env[n.outputs[0]] = act(luts[n.lut], src)
+        elif isinstance(n, ElementwiseNode):
+            a, b = src, env[n.inputs[1]]
+            v = a * b if n.kind == "mul" else a + b
+            env[n.outputs[0]] = _q(v, n.out_fmt)
+    return env[graph.outputs[0]]
+
+
+def assert_bit_exact(graph: Graph, x: jax.Array,
+                     use_pallas: bool = True) -> None:
+    """Raises AssertionError on the first integer mismatch (test helper)."""
+    res = RTLEmulator(graph, use_pallas=use_pallas).run(x)
+    ref = reference_apply(graph, x)
+    fmt = graph.edges[graph.outputs[0]].fmt
+    ref_int = np.asarray(jnp.round(ref * fmt.scale), np.int64)
+    got = np.asarray(res.outputs, np.int64)
+    if not np.array_equal(got, ref_int):
+        bad = np.argwhere(got != ref_int)
+        raise AssertionError(
+            f"emulator != fxp reference at {len(bad)} positions; first "
+            f"{bad[0].tolist()}: got {got[tuple(bad[0])]} "
+            f"ref {ref_int[tuple(bad[0])]} (fmt {fmt})")

@@ -1,0 +1,311 @@
+"""Fixed-point dataflow IR — stage one of the RTL backend.
+
+The ElasticAI-Creator lowers a trained, quantized model into a small graph of
+hardware-template instances before emitting VHDL. This module is that
+lowering: a :class:`Graph` of four node kinds
+
+    linear     — y = requant(x·W + b)            (BRAM weights, serial MACs)
+    lstm_cell  — the paper's gate-fused LSTM template over one window
+    act_lut    — ROM lookup for hard_sigmoid / hard_tanh
+    elementwise— mul/add of two same-shape operands + requant
+
+whose *edges* carry :class:`~repro.quant.fixedpoint.FxpFormat` annotations, so
+every wire in the design has an exact Q-format. The integer semantics of each
+node are defined once (DESIGN.md §4) and implemented twice: the float
+``fxp_quantize`` reference and the int32 emulator in :mod:`repro.rtl.emulator`
+must agree integer-for-integer.
+
+``lower_model`` handles the paper's ``elastic-lstm`` family;
+``lower_linear_stack`` lowers plain MLP/linear parameter stacks (the FFN-shaped
+workloads the creator also supports).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.types import ModelConfig
+from repro.quant.fixedpoint import FxpFormat, fxp_to_int
+
+# f32 mantissa budget: the float reference is exact only while every
+# intermediate integer-scaled value stays below 2**24 (DESIGN.md §4).
+_F32_EXACT_BITS = 24
+
+ACT_KINDS = ("hard_sigmoid", "hard_tanh")
+
+
+@dataclass(frozen=True)
+class Edge:
+    """A typed wire: shape is per-sample (no batch dim), fmt its Q-format."""
+
+    name: str
+    shape: Tuple[int, ...]
+    fmt: FxpFormat
+
+    @property
+    def bits(self) -> int:
+        return int(np.prod(self.shape)) * self.fmt.total_bits
+
+
+@dataclass
+class Node:
+    name: str
+    op: str                          # linear | lstm_cell | act_lut | elementwise
+    inputs: List[str]
+    outputs: List[str]
+
+    def macs(self) -> int:
+        return 0
+
+
+@dataclass
+class LinearNode(Node):
+    """y = requant(x @ W + b): accum at scale a.frac+w.frac -> out_fmt."""
+
+    weight: np.ndarray = None        # (in, out) f32
+    bias: np.ndarray = None          # (out,) f32
+    w_fmt: FxpFormat = FxpFormat(8, 6)
+    in_fmt: FxpFormat = FxpFormat(8, 4)
+    out_fmt: FxpFormat = FxpFormat(16, 8)
+
+    def macs(self) -> int:
+        return int(self.weight.shape[0] * self.weight.shape[1])
+
+    def weight_int(self) -> np.ndarray:
+        return np.asarray(fxp_to_int(self.weight, self.w_fmt))
+
+    def bias_int(self) -> np.ndarray:
+        """Bias at the accumulator scale (wide two's-complement word)."""
+        bfmt = FxpFormat(32, self.in_fmt.frac_bits + self.w_fmt.frac_bits)
+        return np.asarray(fxp_to_int(self.bias, bfmt))
+
+
+@dataclass
+class LSTMCellNode(Node):
+    """The gate-fused LSTM template over a full window (DESIGN.md §4).
+
+    Weights are the fused (d_in+hidden, 4*hidden) gate matrix, gate order
+    i, f, g, o. Activations (x, h) share ``act_fmt``; the cell state c is
+    held at ``state_fmt``. Gate pre-activations are requantized to
+    ``act_fmt`` before the sigmoid/tanh LUTs — narrow LUT inputs keep the
+    ROMs at 2**act_bits words, the standard RTL trick.
+    """
+
+    weight: np.ndarray = None        # (d_in + hidden, 4*hidden)
+    bias: np.ndarray = None          # (4*hidden,)
+    w_fmt: FxpFormat = FxpFormat(8, 6)
+    act_fmt: FxpFormat = FxpFormat(8, 4)
+    state_fmt: FxpFormat = FxpFormat(16, 8)
+    seq_len: int = 6
+    d_in: int = 1
+    hidden: int = 20
+    sigmoid_lut: str = ""            # name of the ActLUTNode serving σ
+    tanh_lut: str = ""
+
+    def macs(self) -> int:
+        per_step = (self.d_in + self.hidden) * 4 * self.hidden
+        elementwise = 4 * self.hidden      # f*c, i*g, o*tanh(c), + state add
+        return self.seq_len * (per_step + elementwise)
+
+    def weight_int(self) -> np.ndarray:
+        return np.asarray(fxp_to_int(self.weight, self.w_fmt))
+
+    def bias_int(self) -> np.ndarray:
+        bfmt = FxpFormat(32, self.act_fmt.frac_bits + self.w_fmt.frac_bits)
+        return np.asarray(fxp_to_int(self.bias, bfmt))
+
+
+@dataclass
+class ActLUTNode(Node):
+    """ROM: out_int[i] = fxp_to_int(act(i / 2**in_frac), out_fmt).
+
+    The table is generated from the float reference itself, so LUT lookup is
+    bit-exact against ``fxp_quantize(act(x))`` *by construction* for every
+    representable input code.
+    """
+
+    kind: str = "hard_sigmoid"
+    in_fmt: FxpFormat = FxpFormat(8, 4)
+    out_fmt: FxpFormat = FxpFormat(8, 4)
+
+    def table(self) -> np.ndarray:
+        """Indexed by (code - lo), i.e. offset-binary address order."""
+        from repro.quant.qat import hard_sigmoid, hard_tanh
+
+        codes = np.arange(self.in_fmt.lo, self.in_fmt.hi + 1, dtype=np.int32)
+        x = codes.astype(np.float32) / self.in_fmt.scale
+        fn = hard_sigmoid if self.kind == "hard_sigmoid" else hard_tanh
+        return np.asarray(fxp_to_int(fn(x), self.out_fmt), dtype=np.int32)
+
+    @property
+    def depth(self) -> int:
+        return 2 ** self.in_fmt.total_bits
+
+
+@dataclass
+class ActApplyNode(Node):
+    """Applies a shared :class:`ActLUTNode`'s table to its input edge."""
+
+    lut: str = ""
+
+
+@dataclass
+class ElementwiseNode(Node):
+    """out = requant(a (mul|add) b); operand scales are aligned in-int."""
+
+    kind: str = "mul"                # "mul" | "add"
+    a_fmt: FxpFormat = FxpFormat(8, 4)
+    b_fmt: FxpFormat = FxpFormat(8, 4)
+    out_fmt: FxpFormat = FxpFormat(8, 4)
+
+    def macs(self) -> int:
+        return 1
+
+
+@dataclass
+class Graph:
+    """Nodes in execution order; edges keyed by name."""
+
+    name: str
+    nodes: List[Node] = field(default_factory=list)
+    edges: Dict[str, Edge] = field(default_factory=dict)
+    inputs: List[str] = field(default_factory=list)
+    outputs: List[str] = field(default_factory=list)
+
+    def node(self, name: str) -> Node:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def total_macs(self) -> int:
+        return sum(n.macs() for n in self.nodes)
+
+    def add(self, node: Node, *edges: Edge) -> Node:
+        self.nodes.append(node)
+        for e in edges:
+            self.edges[e.name] = e
+        return node
+
+
+def validate_formats(*, act: FxpFormat, weight: FxpFormat, state: FxpFormat,
+                     fan_in: int) -> None:
+    """Reject formats outside the exactness envelope (DESIGN.md §4).
+
+    Two independent ceilings collapse to the same check: the int32 emulator
+    must not overflow, and the f32 float reference must stay exact. Both hold
+    while accumulated magnitudes stay below 2**24.
+    """
+    mac_bits = (act.total_bits - 1) + (weight.total_bits - 1) \
+        + math.ceil(math.log2(max(fan_in, 1) + 1))
+    ew_bits = (act.total_bits - 1) + (state.total_bits - 1) + 1
+    worst = max(mac_bits, ew_bits)
+    if worst > _F32_EXACT_BITS:
+        raise ValueError(
+            f"format combo act={act} weight={weight} state={state} "
+            f"fan_in={fan_in} needs {worst} accumulator bits > "
+            f"{_F32_EXACT_BITS}-bit exactness envelope")
+    if state.frac_bits < act.frac_bits:
+        raise ValueError(
+            f"state fmt {state} must carry at least the activation "
+            f"precision {act} (cell-state alignment is a left shift)")
+
+
+# --------------------------------------------------------------------------- #
+# Lowering entry points
+# --------------------------------------------------------------------------- #
+
+
+def lower_model(cfg: ModelConfig, params, *, w_fmt: FxpFormat = FxpFormat(8, 6),
+                act_fmt: FxpFormat = FxpFormat(8, 4),
+                state_fmt: FxpFormat = FxpFormat(16, 8)) -> Graph:
+    """Lower a quantized ModelConfig + trained params into the dataflow IR."""
+    if cfg.family != "lstm":
+        raise NotImplementedError(
+            f"RTL lowering supports family='lstm' and linear stacks; "
+            f"got {cfg.family!r} (use lower_linear_stack for MLPs)")
+    c = cfg.lstm
+    validate_formats(act=act_fmt, weight=w_fmt, state=state_fmt,
+                     fan_in=c.in_features + c.hidden)
+    g = Graph(name=cfg.name)
+    g.edges["x"] = Edge("x", (c.seq_len, c.in_features), act_fmt)
+    g.inputs = ["x"]
+
+    sig = ActLUTNode(name="hard_sigmoid_lut", op="act_lut", inputs=[],
+                     outputs=[], kind="hard_sigmoid", in_fmt=act_fmt,
+                     out_fmt=act_fmt)
+    tanh = ActLUTNode(name="hard_tanh_lut", op="act_lut", inputs=[],
+                      outputs=[], kind="hard_tanh", in_fmt=act_fmt,
+                      out_fmt=act_fmt)
+    g.nodes += [sig, tanh]
+
+    prev = "x"
+    for li, cell in enumerate(params["cells"]):
+        d_in = c.in_features if li == 0 else c.hidden
+        out_edge = Edge(f"h{li}", (c.hidden,), act_fmt)
+        node = LSTMCellNode(
+            name=f"lstm_cell_l{li}", op="lstm_cell", inputs=[prev],
+            outputs=[out_edge.name],
+            weight=np.asarray(cell["w"], np.float32),
+            bias=np.asarray(cell["b"], np.float32),
+            w_fmt=w_fmt, act_fmt=act_fmt, state_fmt=state_fmt,
+            seq_len=c.seq_len, d_in=d_in, hidden=c.hidden,
+            sigmoid_lut=sig.name, tanh_lut=tanh.name)
+        g.add(node, out_edge)
+        prev = out_edge.name
+
+    y_edge = Edge("y", (c.out_features,), state_fmt)
+    g.add(LinearNode(name="linear_head", op="linear", inputs=[prev],
+                     outputs=[y_edge.name],
+                     weight=np.asarray(params["head_w"], np.float32),
+                     bias=np.asarray(params["head_b"], np.float32),
+                     w_fmt=w_fmt, in_fmt=act_fmt, out_fmt=state_fmt),
+          y_edge)
+    g.outputs = [y_edge.name]
+    return g
+
+
+def lower_linear_stack(name: str,
+                       layers: Sequence[Tuple[np.ndarray, np.ndarray]],
+                       *, w_fmt: FxpFormat = FxpFormat(8, 6),
+                       act_fmt: FxpFormat = FxpFormat(8, 4),
+                       accum_fmt: FxpFormat = FxpFormat(16, 8),
+                       act: Optional[str] = "hard_sigmoid") -> Graph:
+    """Lower a plain MLP — [(W, b), ...] with ``act`` between layers."""
+    if act is not None and act not in ACT_KINDS:
+        raise ValueError(f"act must be one of {ACT_KINDS} or None")
+    fan_in = max(int(w.shape[0]) for w, _ in layers)
+    validate_formats(act=act_fmt, weight=w_fmt, state=accum_fmt,
+                     fan_in=fan_in)
+    g = Graph(name=name)
+    g.edges["x"] = Edge("x", (int(layers[0][0].shape[0]),), act_fmt)
+    g.inputs = ["x"]
+    lut = None
+    if act is not None and len(layers) > 1:
+        lut = ActLUTNode(name=f"{act}_lut", op="act_lut", inputs=[],
+                         outputs=[], kind=act, in_fmt=act_fmt,
+                         out_fmt=act_fmt)
+        g.nodes.append(lut)
+    prev = "x"
+    for i, (w, b) in enumerate(layers):
+        last = i == len(layers) - 1
+        out_fmt = accum_fmt if last else act_fmt
+        edge = Edge(f"a{i}" if not last else "y", (int(w.shape[1]),), out_fmt)
+        g.add(LinearNode(name=f"linear_{i}", op="linear", inputs=[prev],
+                         outputs=[edge.name],
+                         weight=np.asarray(w, np.float32),
+                         bias=np.asarray(b, np.float32),
+                         w_fmt=w_fmt, in_fmt=act_fmt, out_fmt=out_fmt),
+              edge)
+        prev = edge.name
+        if not last and lut is not None:
+            edge2 = Edge(f"z{i}", (int(w.shape[1]),), act_fmt)
+            g.add(ActApplyNode(name=f"{act}_{i}", op="act_apply",
+                               inputs=[prev], outputs=[edge2.name],
+                               lut=lut.name), edge2)
+            prev = edge2.name
+    g.outputs = [prev]
+    return g

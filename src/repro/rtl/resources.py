@@ -1,0 +1,174 @@
+"""Per-node FPGA resource counts + cycle model — the "Vivado estimation" half.
+
+Targets the paper's platform (Spartan-7 XC7S15 @ 100 MHz, Table I): 20 DSP48
+slices, 10 BRAM36, 8000 6-input LUTs. The cycle model is the serial-MAC
+schedule of the emitted templates, calibrated once against ref [11]'s
+measured LSTM accelerator (57.25 µs / window): the gate-fused LSTM template
+time-multiplexes its window over ``LSTM_DSP`` MAC units, paying a state
+update + pipeline refill per step. Power is duty-cycled through
+:meth:`HWSpec.energy_j` — MAC/elementwise cycles at ``active_w``, pipeline
+fill at ``idle_w`` (DESIGN.md §5–§6).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.energy.hw import HWSpec, XC7S15
+from repro.core.report import SynthesisReport
+from repro.rtl.ir import (ActLUTNode, ActApplyNode, ElementwiseNode, Graph,
+                          LinearNode, LSTMCellNode)
+
+# Template schedule constants (one-time calibration vs ref [11], DESIGN.md §5)
+LSTM_DSP = 2          # MAC units the gate-fused cell template instantiates
+LINEAR_DSP = 1        # serial-MAC linear template
+PIPE = 8              # pipeline fill/drain cycles per template invocation
+BRAM36_BITS = 36 * 1024
+LUT_ROM_BITS = 64     # one LUT6 stores 64 bits of distributed ROM
+
+XC7S15_DSP = 20
+XC7S15_BRAM36 = 10
+XC7S15_LUTS = 8000
+
+
+@dataclass
+class NodeCost:
+    name: str
+    op: str
+    cycles: int          # total schedule length
+    active_cycles: int   # cycles with MAC/elementwise work in flight
+    dsp: int
+    bram36: int
+    lut: int
+
+    @staticmethod
+    def zero(name: str, op: str) -> "NodeCost":
+        return NodeCost(name, op, 0, 0, 0, 0, 0)
+
+
+@dataclass
+class ResourceReport:
+    design: str
+    target: str
+    per_node: List[NodeCost] = field(default_factory=list)
+    clock_hz: float = 100e6
+
+    @property
+    def cycles(self) -> int:
+        return sum(c.cycles for c in self.per_node)
+
+    @property
+    def active_cycles(self) -> int:
+        return sum(c.active_cycles for c in self.per_node)
+
+    @property
+    def duty(self) -> float:
+        return self.active_cycles / self.cycles if self.cycles else 0.0
+
+    @property
+    def dsp(self) -> int:
+        return sum(c.dsp for c in self.per_node)
+
+    @property
+    def bram36(self) -> int:
+        return sum(c.bram36 for c in self.per_node)
+
+    @property
+    def lut(self) -> int:
+        return sum(c.lut for c in self.per_node)
+
+    @property
+    def latency_s(self) -> float:
+        return self.cycles / self.clock_hz
+
+    def utilization(self) -> Dict[str, float]:
+        return {"dsp": self.dsp / XC7S15_DSP,
+                "bram36": self.bram36 / XC7S15_BRAM36,
+                "lut": self.lut / XC7S15_LUTS}
+
+    def fits(self) -> bool:
+        return all(v <= 1.0 for v in self.utilization().values())
+
+
+def _brams(bits: int) -> int:
+    return max(1, math.ceil(bits / BRAM36_BITS)) if bits else 0
+
+
+def node_cost(node) -> NodeCost:
+    if isinstance(node, LSTMCellNode):
+        per_step_macs = (node.d_in + node.hidden) * 4 * node.hidden
+        mac_cycles = math.ceil(per_step_macs / LSTM_DSP)
+        # elementwise state update: 4 DSP ops per hidden unit, 1/cycle each
+        # on the same MAC units -> hidden cycles; + pipeline refill
+        step = mac_cycles + node.hidden + PIPE
+        w_bits = node.weight.size * node.w_fmt.total_bits
+        b_bits = node.bias.size * 32
+        return NodeCost(
+            node.name, node.op,
+            cycles=node.seq_len * step,
+            active_cycles=node.seq_len * (mac_cycles + node.hidden),
+            dsp=LSTM_DSP, bram36=_brams(w_bits + b_bits),
+            lut=150 + 12 * node.act_fmt.total_bits)
+    if isinstance(node, LinearNode):
+        macs = node.macs()
+        mac_cycles = math.ceil(macs / LINEAR_DSP)
+        out = node.weight.shape[1]
+        w_bits = node.weight.size * node.w_fmt.total_bits
+        b_bits = node.bias.size * 32
+        return NodeCost(
+            node.name, node.op,
+            cycles=mac_cycles + out + PIPE,
+            active_cycles=mac_cycles + out,
+            dsp=LINEAR_DSP, bram36=_brams(w_bits + b_bits),
+            lut=60 + 8 * node.out_fmt.total_bits)
+    if isinstance(node, ActLUTNode):
+        rom_bits = node.depth * node.out_fmt.total_bits
+        return NodeCost(node.name, node.op, cycles=0, active_cycles=0,
+                        dsp=0, bram36=0,
+                        lut=math.ceil(rom_bits / LUT_ROM_BITS))
+    if isinstance(node, ActApplyNode):
+        return NodeCost(node.name, node.op, cycles=1, active_cycles=1,
+                        dsp=0, bram36=0, lut=4)
+    if isinstance(node, ElementwiseNode):
+        return NodeCost(node.name, node.op, cycles=1 + PIPE,
+                        active_cycles=1, dsp=1, bram36=0, lut=16)
+    return NodeCost.zero(node.name, node.op)
+
+
+def estimate(graph: Graph, *, clock_hz: float = 100e6) -> ResourceReport:
+    rep = ResourceReport(design=graph.name, target="xc7s15",
+                         clock_hz=clock_hz)
+    rep.per_node = [node_cost(n) for n in graph.nodes]
+    return rep
+
+
+def synthesize(graph: Graph, *, hw: HWSpec = XC7S15,
+               model_flops: float = 0.0,
+               n_artifacts: int = 0) -> SynthesisReport:
+    """ResourceReport -> SynthesisReport, the stage-2 artifact the Workflow
+    loop reads. Latency = cycles × clock; energy duty-cycled via HWSpec."""
+    clock = hw.clock_hz or 100e6
+    rr = estimate(graph, clock_hz=clock)
+    latency = rr.latency_s
+    energy = hw.energy_j(latency, duty=rr.duty)
+    if not model_flops:
+        model_flops = 2.0 * graph.total_macs()
+    util = rr.utilization()
+    weight_bits = sum(e.bits for e in graph.edges.values())
+    return SynthesisReport(
+        model=graph.name, target=hw.name, backend="rtl",
+        argument_bytes=sum(graph.edges[e].bits for e in graph.inputs) // 8,
+        output_bytes=sum(graph.edges[e].bits for e in graph.outputs) // 8,
+        temp_bytes=weight_bits // 8,
+        fits=rr.fits(), utilization=max(util.values()),
+        flops=model_flops, bytes_accessed=float(weight_bits // 8),
+        est_latency_s=latency,
+        est_power_w=energy / latency if latency else 0.0,
+        est_energy_j=energy,
+        est_gop_per_j=(model_flops / 1e9) / energy if energy else 0.0,
+        bottleneck="compute",
+        resources={"dsp": rr.dsp, "bram36": rr.bram36, "lut": rr.lut,
+                   "cycles": rr.cycles, "duty": round(rr.duty, 4),
+                   **{f"util_{k}": round(v, 4) for k, v in util.items()}},
+        n_artifacts=n_artifacts)

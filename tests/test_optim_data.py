@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                       # image lacks hypothesis: use shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.data.pipeline import (LMDataConfig, Prefetcher, lm_batch_for_step,
                                  make_lm_iterator, traffic_flow_batch,

@@ -2,8 +2,11 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                       # image lacks hypothesis: use shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.energy.meter import meter_channels
 from repro.energy.roofline import (_shape_bytes, parse_collectives, roofline)

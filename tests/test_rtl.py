@@ -1,0 +1,289 @@
+"""RTL backend: codegen artifacts, bit-exact emulation, resource model,
+and the full Workflow round-trip with backend="rtl"."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                       # image lacks hypothesis: use shim
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.creator import Creator
+from repro.core.types import SHAPES_LSTM
+from repro.energy.hw import XC7S15
+from repro.model.layers import init_params
+from repro.model.lstm import lstm_flops, lstm_schema
+from repro.quant.fixedpoint import FxpFormat, fxp_requant_int, fxp_quantize
+from repro.rtl import (ActLUTNode, ElementwiseNode, Graph, Edge,
+                       RTLEmulator, assert_bit_exact, emit_graph, estimate,
+                       lower_linear_stack, lower_model, reference_apply,
+                       synthesize, validate_formats)
+
+
+def _lstm_graph(**fmts):
+    cfg = get_config("elastic-lstm")
+    params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+    return lower_model(cfg, params, **fmts)
+
+
+# --------------------------------------------------------------------------- #
+# Codegen artifacts
+# --------------------------------------------------------------------------- #
+
+
+def test_translate_rtl_emits_artifacts():
+    """The acceptance path: translate(backend="rtl") -> ≥3 template files."""
+    cr = Creator(hw=XC7S15)
+    st_ = cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
+    syn, exe = cr.translate(st_, backend="rtl")
+    assert syn.backend == "rtl"
+    assert syn.n_artifacts >= 3
+    assert len(exe.artifacts) >= 3
+    vhds = [n for n in exe.artifacts if n.endswith(".vhd")]
+    mems = [n for n in exe.artifacts if n.endswith(".mem")]
+    assert len(vhds) >= 3 and len(mems) >= 3
+    assert "manifest.json" in exe.artifacts
+    man = json.loads(exe.artifacts["manifest.json"])
+    assert man["total_macs"] > 0
+    assert "Q8.4" in str(man["edges"])
+    # entity text mentions the ROM files it loads
+    cell_vhd = exe.artifacts["lstm_cell_l0.vhd"]
+    assert "lstm_cell_l0_w.mem" in cell_vhd
+    assert "entity lstm_cell_l0" in cell_vhd
+
+
+def test_artifact_hex_round_trips():
+    """BRAM init words decode back to the fxp_to_int weight codes."""
+    g = _lstm_graph()
+    arts = emit_graph(g)
+    node = g.node("lstm_cell_l0")
+    lines = arts["lstm_cell_l0_w.mem"].splitlines()
+    codes = node.weight_int().reshape(-1)
+    assert len(lines) == codes.size
+    bits = node.w_fmt.total_bits
+    for line, code in zip(lines[:64], codes[:64]):
+        v = int(line, 16)
+        if v >= 1 << (bits - 1):
+            v -= 1 << bits
+        assert v == int(code)
+
+
+def test_lut_table_matches_fxp_reference():
+    """ROM contents equal fxp_to_int(act(code/scale)) for every code."""
+    from repro.quant.qat import hard_sigmoid
+
+    lut = ActLUTNode(name="s", op="act_lut", inputs=[], outputs=[],
+                     kind="hard_sigmoid", in_fmt=FxpFormat(8, 4),
+                     out_fmt=FxpFormat(8, 4))
+    t = lut.table()
+    assert t.shape == (256,)
+    codes = np.arange(-128, 128)
+    ref = np.asarray(jnp.round(jnp.clip(
+        fxp_quantize(hard_sigmoid(codes / 16.0), FxpFormat(8, 4)) * 16.0,
+        -128, 127)), np.int32)
+    assert np.array_equal(t, ref)
+
+
+# --------------------------------------------------------------------------- #
+# Bit-exactness: emulator vs fxp_quantize reference
+# --------------------------------------------------------------------------- #
+
+
+def test_emulator_bit_exact_default_formats():
+    g = _lstm_graph()
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 6, 1)) * 2.0
+    assert_bit_exact(g, x, use_pallas=True)
+    assert_bit_exact(g, x, use_pallas=False)
+
+
+def test_emulator_pallas_and_jnp_agree():
+    g = _lstm_graph()
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 6, 1))
+    a = RTLEmulator(g, use_pallas=True).run(x).outputs
+    b = RTLEmulator(g, use_pallas=False).run(x).outputs
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(4, 8), st.integers(4, 8), st.integers(10, 16),
+       st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_emulator_bit_exact_random_formats(w_total, a_total, s_total, seed):
+    """Property: exact integer equality over random Q-formats + inputs."""
+    w_fmt = FxpFormat(w_total, max(1, w_total - 2))
+    a_fmt = FxpFormat(a_total, max(1, a_total - 3))
+    s_fmt = FxpFormat(s_total, max(a_fmt.frac_bits, s_total - 8))
+    g = _lstm_graph(w_fmt=w_fmt, act_fmt=a_fmt, state_fmt=s_fmt)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 6, 1)) * 3.0
+    assert_bit_exact(g, x, use_pallas=False)
+
+
+def test_netlist_references_resolve():
+    """Every `entity work.X` the top level instantiates must be emitted."""
+    import re
+
+    k = jax.random.PRNGKey(0)
+    ws = [np.asarray(jax.random.normal(k, (6, 6))) * 0.4] * 2
+    bs = [np.zeros(6, np.float32)] * 2
+    for g in (_lstm_graph(),
+              lower_linear_stack("mlp_ref", list(zip(ws, bs)))):
+        arts = emit_graph(g)
+        top = arts[f"{g.name}.vhd"]
+        refs = set(re.findall(r"entity work\.(\w+)", top))
+        ents = {m for a in arts.values()
+                for m in re.findall(r"^entity (\w+) is", a, re.M)}
+        assert refs <= ents, (g.name, refs - ents)
+
+
+def test_mlp_stack_bit_exact():
+    k = jax.random.PRNGKey(3)
+    ws = [np.asarray(jax.random.normal(jax.random.PRNGKey(i), s)) * 0.5
+          for i, s in enumerate([(8, 16), (16, 4)])]
+    bs = [np.full(16, 0.1, np.float32), np.zeros(4, np.float32)]
+    g = lower_linear_stack("mlp_demo", list(zip(ws, bs)))
+    x = jax.random.normal(k, (5, 8))
+    assert_bit_exact(g, x, use_pallas=True)
+    assert_bit_exact(g, x, use_pallas=False)
+    arts = emit_graph(g)
+    assert "mlp_demo.vhd" in arts and "linear_0_w.mem" in arts
+
+
+def test_elementwise_node_bit_exact():
+    a_fmt = FxpFormat(8, 4)
+    out_fmt = FxpFormat(8, 5)
+    g = Graph(name="ew")
+    g.edges["x"] = Edge("x", (6,), a_fmt)
+    g.edges["x2"] = Edge("x2", (6,), a_fmt)
+    g.inputs = ["x"]
+    g.add(ElementwiseNode(name="sq", op="elementwise", inputs=["x", "x"],
+                          outputs=["y"], kind="mul", a_fmt=a_fmt,
+                          b_fmt=a_fmt, out_fmt=out_fmt),
+          Edge("y", (6,), out_fmt))
+    g.outputs = ["y"]
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 6))
+    assert_bit_exact(g, x, use_pallas=False)
+
+
+def test_requant_int_matches_fxp_quantize():
+    """The integer rounding shift is fxp_quantize, code-for-code."""
+    rng = np.random.default_rng(0)
+    for from_frac, fmt in [(8, FxpFormat(8, 4)), (10, FxpFormat(8, 6)),
+                           (4, FxpFormat(8, 6)), (6, FxpFormat(16, 6))]:
+        v = jnp.asarray(rng.integers(-(1 << 15), 1 << 15, 256), jnp.int32)
+        got = fxp_requant_int(v, from_frac, fmt)
+        ref = fxp_quantize(v.astype(jnp.float32) / (1 << from_frac), fmt)
+        assert np.array_equal(np.asarray(got, np.int64),
+                              np.asarray(jnp.round(ref * fmt.scale),
+                                         np.int64)), (from_frac, str(fmt))
+
+
+def test_validate_formats_rejects_overflow_risk():
+    with pytest.raises(ValueError):
+        validate_formats(act=FxpFormat(16, 8), weight=FxpFormat(16, 8),
+                         state=FxpFormat(16, 8), fan_in=1024)
+    with pytest.raises(ValueError):
+        # state narrower than activations: alignment shift would be lossy
+        validate_formats(act=FxpFormat(8, 6), weight=FxpFormat(8, 6),
+                         state=FxpFormat(16, 4), fan_in=8)
+
+
+# --------------------------------------------------------------------------- #
+# Resource / cycle model
+# --------------------------------------------------------------------------- #
+
+
+def test_resource_model_monotone_in_hidden():
+    cfg = get_config("elastic-lstm")
+    prev = None
+    for hidden in (8, 16, 32):
+        c2 = cfg.with_(lstm=cfg.lstm.__class__(
+            hidden=hidden, n_layers=1, in_features=1, out_features=1,
+            seq_len=6))
+        params = init_params(lstm_schema(c2), jax.random.PRNGKey(0))
+        rr = estimate(lower_model(c2, params))
+        cur = (rr.cycles, rr.dsp, rr.bram36, rr.lut)
+        if prev is not None:
+            assert all(a >= b for a, b in zip(cur, prev)), (cur, prev)
+        assert rr.cycles > 0 and rr.duty > 0.5
+        prev = cur
+
+
+def test_resource_model_monotone_in_bits():
+    a5 = FxpFormat(5, 3)                  # keeps Q16 weights in the envelope
+    g8 = _lstm_graph(w_fmt=FxpFormat(8, 6), act_fmt=a5)
+    g16 = _lstm_graph(w_fmt=FxpFormat(16, 12), act_fmt=a5)
+    r8, r16 = estimate(g8), estimate(g16)
+    assert r16.bram36 >= r8.bram36
+    assert r16.lut >= r8.lut
+
+
+def test_synthesis_report_tracks_table1():
+    """Generated-artifact estimate must sit in the paper's ~10% band."""
+    g = _lstm_graph()
+    rep = synthesize(g, hw=XC7S15,
+                     model_flops=float(lstm_flops(get_config("elastic-lstm"))))
+    assert rep.fits
+    lat_err = (rep.est_latency_s * 1e6 - 57.25) / 57.25
+    eff_err = (rep.est_gop_per_j - 5.33) / 5.33
+    assert abs(lat_err) < 0.12, rep.est_latency_s
+    assert abs(eff_err) < 0.12, rep.est_gop_per_j
+    assert rep.resources["dsp"] <= 20 and rep.resources["bram36"] <= 10
+
+
+# --------------------------------------------------------------------------- #
+# Workflow round-trip on the generated accelerator
+# --------------------------------------------------------------------------- #
+
+
+def test_workflow_roundtrip_backend_rtl():
+    from repro.core.report import DesignReport
+    from repro.core.workflow import Requirement, Workflow
+
+    cfg = get_config("elastic-lstm")
+
+    def train_fn(knobs):
+        params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+        rep = DesignReport(model="elastic-lstm", train_loss=0.0,
+                           eval_loss=0.0, weight_fmt=str(
+                               FxpFormat(knobs["bits"], knobs["bits"] - 2)))
+        return params, rep, None
+
+    def step_builder(knobs, params):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 1))
+        return None, (params, x), float(lstm_flops(cfg))
+
+    def stepper_builder(knobs):
+        return Creator(hw=XC7S15).build(cfg, SHAPES_LSTM["infer_1"])
+
+    def fmt_builder(knobs):
+        b = knobs["bits"]
+        return {"w_fmt": FxpFormat(b, b - 2), "act_fmt": FxpFormat(b, b - 4)}
+
+    wf = Workflow(creator=Creator(hw=XC7S15), train_fn=train_fn,
+                  step_builder=step_builder, stepper_builder=stepper_builder,
+                  backend="rtl", fmt_builder=fmt_builder)
+    hist = wf.run(Requirement(max_latency_s=1.0), lambda h: None,
+                  {"bits": 8}, max_iters=2)
+    assert len(hist) == 1 and hist[0].satisfied
+    rec = hist[0]
+    assert rec.synthesis.backend == "rtl"
+    assert rec.synthesis.n_artifacts >= 3
+    assert rec.measurement.platform.startswith("rtl-emulator")
+    assert rec.measurement.latency_s > 0
+    assert abs(rec.est_vs_meas["latency_rel_err"]) < 1e-9
+    assert rec.measurement.gop_per_j > 1.0
+
+
+def test_rtl_executable_save(tmp_path):
+    cr = Creator(hw=XC7S15)
+    st_ = cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
+    _, exe = cr.translate(st_, backend="rtl")
+    exe.save(str(tmp_path))
+    files = list(tmp_path.iterdir())
+    assert len(files) == len(exe.artifacts)
+    assert exe.cycles > 0
