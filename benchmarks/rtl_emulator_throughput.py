@@ -1,0 +1,99 @@
+"""RTL-emulator throughput: fused single-dispatch executor vs per-step.
+
+The emulator is the inner loop of the whole Creator workflow (every generated
+accelerator is verified/measured against it), so its throughput gates design
+iteration. This benchmark sweeps batch × the paper's seq-6 window on the
+elastic-lstm design and times
+
+* ``fused``    — the staged executor (one fused int LSTM kernel dispatch per
+  cell per window, jitted graph walk, weight-resident device constants);
+* ``per_step`` — the pre-fusion schedule (one interpreted MAC ``pallas_call``
+  per timestep from an un-jitted Python walk), the PR-1 baseline.
+
+Writes ``BENCH_rtl_emulator.json`` (the perf trajectory artifact; CI uploads
+it on every push).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+DEFAULT_BATCHES = (1, 32, 256)
+SEQ = 6
+
+
+def _timeit(fn, n: int) -> float:
+    """Mean µs/call over n calls (fn must block on its own result)."""
+    fn()                                     # warm: compile/trace once
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(batches=DEFAULT_BATCHES, *, n_fused: int = 20, n_per_step: int = 3,
+        out: str = "BENCH_rtl_emulator.json") -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.creator import Creator
+    from repro.core.types import SHAPES_LSTM
+    from repro.energy.hw import XC7S15
+    from repro.rtl import RTLEmulator
+
+    cr = Creator(hw=XC7S15)
+    st = cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
+    _, exe = cr.translate(st, backend="rtl")
+    fused = exe.emulator                     # staged executor, mode="fused"
+    per_step = RTLEmulator(exe.graph, mode="pallas")   # PR-1 schedule
+
+    rows = []
+    for batch in batches:
+        x = jax.random.normal(jax.random.PRNGKey(0), (batch, SEQ, 1))
+        fused_us = _timeit(
+            lambda: jax.block_until_ready(fused.run(x).outputs), n_fused)
+        per_step_us = _timeit(
+            lambda: jax.block_until_ready(
+                per_step.run_per_step(x).outputs), n_per_step)
+        row = {
+            "batch": batch, "seq": SEQ,
+            "fused_us": round(fused_us, 1),
+            "per_step_us": round(per_step_us, 1),
+            "speedup": round(per_step_us / fused_us, 2),
+            "fused_us_per_window": round(fused_us / batch, 2),
+        }
+        rows.append(row)
+        print(f"batch={batch:>4} seq={SEQ}: fused {fused_us:>10.1f} us  "
+              f"per-step {per_step_us:>12.1f} us  "
+              f"x{row['speedup']:.1f}  ({row['fused_us_per_window']:.2f} "
+              f"us/window)")
+
+    result = {
+        "design": "elastic-lstm",
+        "backend": jax.default_backend(),
+        "trace_count": fused.trace_count,    # == len(batches): one per shape
+        "rows": rows,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {out}")
+    return result
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--batch", type=int, nargs="+", default=None,
+                   help="batch sizes to sweep (default: 1 32 256)")
+    p.add_argument("--n", type=int, default=20,
+                   help="timed iterations for the fused path")
+    p.add_argument("--out", default="BENCH_rtl_emulator.json",
+                   help="output JSON path ('' to skip writing)")
+    a = p.parse_args()
+    run(tuple(a.batch) if a.batch else DEFAULT_BATCHES,
+        n_fused=a.n, out=a.out)
+
+
+if __name__ == "__main__":
+    main()

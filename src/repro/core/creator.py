@@ -61,8 +61,10 @@ class Creator:
         VHDL-like template artifacts, and return an
         :class:`~repro.rtl.backend.RTLExecutable` whose bit-exact integer
         emulator stands in for the deployed accelerator. ``params`` (trained
-        weights) and Q-format kwargs (``w_fmt``/``act_fmt``/``state_fmt``)
-        are only meaningful for the RTL backend.
+        weights), Q-format kwargs (``w_fmt``/``act_fmt``/``state_fmt``) and
+        ``emulator_mode`` ("fused" single-dispatch kernel, default, or the
+        "pallas"/"jnp" per-step cross-check schedules) are only meaningful
+        for the RTL backend.
         """
         if backend == "rtl":
             from repro.energy.hw import XC7S15
@@ -200,12 +202,14 @@ class Creator:
             n_runs=n_runs)
 
     def measure_rtl(self, exe, x, *, model: str, model_flops: float,
-                    hw: Optional[HWSpec] = None) -> MeasurementReport:
+                    hw: Optional[HWSpec] = None,
+                    n_runs: int = 1) -> MeasurementReport:
         """Stage 3 for the RTL backend: execute the bit-exact emulator (the
         deployed accelerator's proxy) and read latency/power off its
         cycle-accurate schedule — emulator cycles × clock, duty-cycled
-        power via :meth:`HWSpec.energy_j`."""
+        power via :meth:`HWSpec.energy_j`. Repeated measurement replays the
+        emulator's compiled program — no retrace, no weight re-upload."""
         from repro.rtl.backend import measure_rtl
 
         return measure_rtl(exe, x, model=model, model_flops=model_flops,
-                           hw=hw)
+                           hw=hw, n_runs=n_runs)

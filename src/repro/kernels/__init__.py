@@ -6,6 +6,16 @@ Each template: <name>/kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
 tests/test_kernels_*.py).
 """
 
+# the template library (one package per hardware template)
+TEMPLATES = (
+    "flash_attention",
+    "lstm_cell",        # f32 fused LSTM window (XLA-backend analogue)
+    "lstm_cell_int",    # int32 fused LSTM window (RTL emulator hot path)
+    "mamba2",
+    "quant_matmul",
+    "rwkv6",
+)
+
 INTERPRET = None  # resolved lazily per-backend
 
 

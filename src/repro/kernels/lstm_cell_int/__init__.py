@@ -1,0 +1,5 @@
+"""Fused integer LSTM-window template (the RTL emulator's hot path)."""
+from repro.kernels.lstm_cell_int.kernel import (CellSpec,  # noqa: F401
+                                                lstm_window_int_pallas)
+from repro.kernels.lstm_cell_int.ops import lstm_window_int  # noqa: F401
+from repro.kernels.lstm_cell_int.ref import lstm_window_int_ref  # noqa: F401

@@ -1,0 +1,125 @@
+"""Fused *integer* LSTM-window template — the emulator's hot path.
+
+The RTL emulator's original schedule dispatched one interpreted MAC
+``pallas_call`` per timestep per cell and gathered the activation LUTs from
+host-side tables between dispatches. This kernel is the single-dispatch
+replacement, mirroring the f32 ``kernels/lstm_cell`` template: the fused gate
+matrix W ((d_in+hid) × 4·hid), the accumulator-scale bias, and *both*
+activation ROMs are pinned in VMEM for the whole window (BlockSpec maps them
+to the same block for every grid step), the int32 (h, c) state lives in VMEM
+scratch, and a ``fori_loop`` iterates the timesteps in-kernel — requant
+(round-half-even shift + saturate) and LUT gathers included. One dispatch per
+cell per window instead of ``seq_len``, zero intermediate HBM traffic.
+
+Semantics are DESIGN.md §4, integer for integer — the same
+``fxp_requant_int`` primitive as the per-step reference paths, so the
+bit-exactness contract carries over unchanged.
+
+Grid: (B/bb,) batch tiles; time is a ``fori_loop`` inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.quant.fixedpoint import FxpFormat, fxp_requant_int
+
+
+@dataclass(frozen=True)
+class CellSpec:
+    """Static metadata of one lstm_cell node — hashable, jit-static.
+
+    Everything the fused kernel needs beyond the operand arrays: the window
+    geometry, the three Q-formats' requant parameters, and the LUT address
+    offsets (ROM tables are indexed by ``code - lo``, offset-binary order).
+    """
+
+    seq_len: int
+    d_in: int
+    hidden: int
+    act_fmt: FxpFormat               # A: x, h, gate post-LUT values
+    state_fmt: FxpFormat             # C: cell state
+    w_fmt: FxpFormat                 # W: gate matrix codes
+    sig_lo: int                      # sigmoid ROM address offset
+    tanh_lo: int                     # tanh ROM address offset
+
+
+def _lstm_int_kernel(x_ref, w_ref, b_ref, sig_ref, tanh_ref, o_ref,
+                     h_ref, c_ref, *, spec: CellSpec):
+    A, C = spec.act_fmt, spec.state_fmt
+    af, wf, cf = A.frac_bits, spec.w_fmt.frac_bits, C.frac_bits
+    H, d_in = spec.hidden, spec.d_in
+    h_ref[...] = jnp.zeros_like(h_ref)
+    c_ref[...] = jnp.zeros_like(c_ref)
+    w = w_ref[...]                                   # ((d_in+hid), 4*hid)
+    b = b_ref[...]                                   # (1, 4*hid)
+    sig_rom = sig_ref[0]                             # (2**A.bits,)
+    tanh_rom = tanh_ref[0]
+
+    def step(t, _):
+        x_t = x_ref[:, t, :].astype(jnp.int32)       # (bb, d_in)
+        h = h_ref[...]
+        zx = jax.lax.dot_general(x_t, w[:d_in], (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)
+        zh = jax.lax.dot_general(h, w[d_in:], (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)
+        z = fxp_requant_int(zx + zh + b, af + wf, A)  # acc -> act fmt
+        i, f = z[:, :H], z[:, H:2 * H]
+        g, o = z[:, 2 * H:3 * H], z[:, 3 * H:]
+        si = jnp.take(sig_rom, i - spec.sig_lo)
+        sf = jnp.take(sig_rom, f - spec.sig_lo)
+        so = jnp.take(sig_rom, o - spec.sig_lo)
+        tg = jnp.take(tanh_rom, g - spec.tanh_lo)
+        # align si*tg (scale 2·af) to sf*c (scale af+cf): << (cf - af)
+        term = sf * c_ref[...] + jax.lax.shift_left(si * tg, cf - af)
+        c = fxp_requant_int(term, af + cf, C)
+        c_a = fxp_requant_int(c, cf, A)
+        tc = jnp.take(tanh_rom, c_a - spec.tanh_lo)
+        h = fxp_requant_int(so * tc, 2 * af, A)
+        h_ref[...] = h
+        c_ref[...] = c
+        o_ref[:, t, :] = h
+        return 0
+
+    jax.lax.fori_loop(0, spec.seq_len, step, 0)
+
+
+def lstm_window_int_pallas(
+    x: jax.Array,           # (B, S, d_in) int codes at act_fmt
+    w: jax.Array,           # (d_in + hidden, 4*hidden) int32
+    b: jax.Array,           # (4*hidden,) int32, accumulator scale
+    sig_table: jax.Array,   # (2**act_bits,) int32 ROM
+    tanh_table: jax.Array,  # (2**act_bits,) int32 ROM
+    *, spec: CellSpec, block_b: int = 128, interpret: bool = False,
+) -> jax.Array:
+    """Returns the full hidden sequence (B, S, hidden) int32."""
+    B, S, d_in = x.shape
+    assert (S, d_in) == (spec.seq_len, spec.d_in), ((S, d_in), spec)
+    H = spec.hidden
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    depth = sig_table.shape[0]
+    return pl.pallas_call(
+        functools.partial(_lstm_int_kernel, spec=spec),
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, S, d_in), lambda i: (i, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0)),      # VMEM-resident
+            pl.BlockSpec((1, b.shape[0]), lambda i: (0, 0)),
+            pl.BlockSpec((1, depth), lambda i: (0, 0)),
+            pl.BlockSpec((1, tanh_table.shape[0]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, S, H), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((bb, H), jnp.int32),
+            pltpu.VMEM((bb, H), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, w, b.reshape(1, -1), sig_table.reshape(1, -1),
+      tanh_table.reshape(1, -1))

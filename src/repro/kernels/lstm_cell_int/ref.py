@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused integer LSTM window.
+
+One timestep at a time, the same schedule the per-step emulator paths run —
+the kernel is validated against this reference integer-for-integer in
+``tests/test_kernels.py`` / ``tests/test_rtl.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lstm_cell_int.kernel import CellSpec
+from repro.quant.fixedpoint import fxp_requant_int
+
+
+def lstm_window_int_ref(x, w, b, sig_table, tanh_table, *,
+                        spec: CellSpec) -> jax.Array:
+    """(B, S, d_in) int codes -> (B, S, hidden) int32, per-step schedule."""
+    A, C = spec.act_fmt, spec.state_fmt
+    af, wf, cf = A.frac_bits, spec.w_fmt.frac_bits, C.frac_bits
+    B = x.shape[0]
+    h = jnp.zeros((B, spec.hidden), jnp.int32)
+    c = jnp.zeros((B, spec.hidden), jnp.int32)
+    outs = []
+    for t in range(spec.seq_len):
+        xh = jnp.concatenate([x[:, t].astype(jnp.int32), h], axis=-1)
+        acc = jax.lax.dot_general(xh, w, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32) + b
+        z = fxp_requant_int(acc, af + wf, A)
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        si = jnp.take(sig_table, i - spec.sig_lo)
+        sf = jnp.take(sig_table, f - spec.sig_lo)
+        so = jnp.take(sig_table, o - spec.sig_lo)
+        tg = jnp.take(tanh_table, g - spec.tanh_lo)
+        term = sf * c + jax.lax.shift_left(si * tg, cf - af)
+        c = fxp_requant_int(term, af + cf, C)
+        c_a = fxp_requant_int(c, cf, A)
+        tc = jnp.take(tanh_table, c_a - spec.tanh_lo)
+        h = fxp_requant_int(so * tc, 2 * af, A)
+        outs.append(h)
+    return jnp.stack(outs, axis=1)

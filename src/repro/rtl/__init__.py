@@ -11,8 +11,8 @@ are importable here for direct use and tests.
 from repro.rtl.backend import (RTLExecutable, measure_rtl,  # noqa: F401
                                translate_rtl)
 from repro.rtl.emit import emit_graph, write_artifacts  # noqa: F401
-from repro.rtl.emulator import (RTLEmulator, assert_bit_exact,  # noqa: F401
-                                reference_apply)
+from repro.rtl.emulator import (EmulationResult, RTLEmulator,  # noqa: F401
+                                assert_bit_exact, reference_apply)
 from repro.rtl.ir import (ActApplyNode, ActLUTNode,  # noqa: F401
                           ElementwiseNode, Edge, Graph, LinearNode,
                           LSTMCellNode, lower_linear_stack, lower_model,

@@ -29,18 +29,26 @@ class RTLExecutable:
 
     Callable like the jitted executables the XLA backend returns: feeding it a
     float batch runs the bit-exact emulator and yields dequantized outputs.
+    The emulator is the staged executor (DESIGN.md §7): weights live on
+    device from construction and repeated calls replay compiled programs, so
+    this object is cheap to call in verification/measurement loops.
     """
 
     graph: Graph
     artifacts: Dict[str, str]
     hw: HWSpec
+    emulator_mode: str = "fused"     # "fused" | "pallas" | "jnp"
     emulator: RTLEmulator = field(init=False)
 
     def __post_init__(self):
-        self.emulator = RTLEmulator(self.graph)
+        self.emulator = RTLEmulator(self.graph, mode=self.emulator_mode)
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.emulator.run(x).outputs_f
+
+    def run_many(self, xs) -> list:
+        """Batched-throughput entry: see :meth:`RTLEmulator.run_many`."""
+        return self.emulator.run_many(xs)
 
     @property
     def cycles(self) -> int:
@@ -58,25 +66,33 @@ def translate_rtl(cfg: ModelConfig, params, *,
                   w_fmt: FxpFormat = FxpFormat(8, 6),
                   act_fmt: FxpFormat = FxpFormat(8, 4),
                   state_fmt: FxpFormat = FxpFormat(16, 8),
-                  model_flops: float = 0.0):
+                  model_flops: float = 0.0,
+                  emulator_mode: str = "fused"):
     """Returns (SynthesisReport, RTLExecutable)."""
     graph = lower_model(cfg, params, w_fmt=w_fmt, act_fmt=act_fmt,
                         state_fmt=state_fmt)
     artifacts = emit_graph(graph)
     rep = synthesize(graph, hw=hw, model_flops=model_flops,
                      n_artifacts=len(artifacts))
-    return rep, RTLExecutable(graph=graph, artifacts=artifacts, hw=hw)
+    return rep, RTLExecutable(graph=graph, artifacts=artifacts, hw=hw,
+                              emulator_mode=emulator_mode)
 
 
 def measure_rtl(exe: RTLExecutable, x: jax.Array, *, model: str,
-                model_flops: float, hw: Optional[HWSpec] = None
-                ) -> MeasurementReport:
+                model_flops: float, hw: Optional[HWSpec] = None,
+                n_runs: int = 1) -> MeasurementReport:
     """Stage-3 for the RTL backend: run the emulator (the deployed-design
-    proxy), then read latency/power off the cycle-accurate schedule."""
+    proxy), then read latency/power off the cycle-accurate schedule.
+
+    ``n_runs > 1`` re-executes the design that many times — after the first
+    call every repeat replays the same compiled program (the emulator's
+    program cache), which is what makes measurement loops cheap.
+    """
     hw = hw or exe.hw
     clock = hw.clock_hz or 100e6
     rr = estimate(exe.graph, clock_hz=clock)
-    out = exe(x)                              # actually execute the design
+    for _ in range(max(1, n_runs)):           # actually execute the design
+        out = exe(x)
     jax.block_until_ready(out)
     latency = rr.latency_s
     energy = hw.energy_j(latency, duty=rr.duty)
@@ -86,4 +102,4 @@ def measure_rtl(exe: RTLExecutable, x: jax.Array, *, model: str,
         power_w=energy / latency if latency else 0.0,
         energy_j=energy,
         gop_per_j=(model_flops / 1e9) / energy if energy else 0.0,
-        n_runs=1)
+        n_runs=max(1, n_runs))

@@ -6,7 +6,7 @@ Every IR node's integer semantics (DESIGN.md §4) are implemented twice:
   ``fxp_quantize`` / the hard activations, i.e. the semantics the QAT stage
   trains against;
 * :class:`RTLEmulator` — vectorized int32 arithmetic (what the DSP slices
-  compute), with a Pallas kernel for the hot LSTM-cell MAC loop.
+  compute), with a fused Pallas kernel for the LSTM-cell window.
 
 The contract is exact equality, integer for integer, not a tolerance:
 ``emulator.run(x)`` must satisfy ``y_int == round(reference_apply(x) * 2**f)``
@@ -15,18 +15,33 @@ generated from the float reference) and by the round-half-even shift
 (``fxp_requant_int``) everywhere else, provided formats pass
 ``ir.validate_formats`` — the same envelope that keeps int32 from
 overflowing keeps the f32 oracle exact.
+
+Execution model (DESIGN.md §7): the emulator is a *staged executor*.
+``__init__`` hoists every weight/bias/LUT conversion to a device constant
+once; the graph walk is traced into a single ``jax.jit``-compiled program
+per ``(input shape, dtype)``, held in a small LRU — so repeated
+verification/measurement calls never retrace and never re-upload. Three
+execution paths share the bit-exactness contract:
+
+* ``mode="fused"`` (default) — one :mod:`repro.kernels.lstm_cell_int`
+  dispatch per cell per window (weights + both ROMs VMEM-resident);
+* ``mode="pallas"`` — one :func:`mac_int_pallas` dispatch per timestep
+  (the PR-1 schedule, kept as a cross-check);
+* ``mode="jnp"`` — plain-jnp per-step reference.
 """
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, List, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import use_interpret
+from repro.kernels.lstm_cell_int import CellSpec, lstm_window_int
 from repro.quant.fixedpoint import (FxpFormat, fxp_quantize, fxp_requant_int,
                                     fxp_to_int)
 from repro.quant.qat import hard_sigmoid, hard_tanh
@@ -84,55 +99,90 @@ class EmulationResult:
 
 
 class RTLEmulator:
-    """Runs the emitted design on integer inputs, batch-vectorized."""
+    """Runs the emitted design on integer inputs, batch-vectorized.
 
-    def __init__(self, graph: Graph, use_pallas: bool = True):
+    A staged executor: all parameters live on device from construction, and
+    each distinct ``(input shape, dtype)`` compiles exactly once into the
+    program LRU (``trace_count`` observes this; see the retrace test).
+    """
+
+    MODES = ("fused", "pallas", "jnp")
+
+    def __init__(self, graph: Graph, use_pallas: bool = True,
+                 mode: str = None, max_programs: int = 8):
         self.graph = graph
         self.use_pallas = use_pallas
+        self.mode = mode if mode is not None else \
+            ("fused" if use_pallas else "jnp")
+        if self.mode not in self.MODES:
+            raise ValueError(f"mode must be one of {self.MODES}, "
+                             f"got {self.mode!r}")
+        if max_programs < 1:
+            raise ValueError(f"max_programs must be >= 1, got {max_programs}")
         self._interpret = use_interpret()
-        self._luts = {n.name: jnp.asarray(n.table(), jnp.int32)
-                      for n in graph.nodes if isinstance(n, ActLUTNode)}
-        self._lut_nodes = {n.name: n for n in graph.nodes
-                           if isinstance(n, ActLUTNode)}
+        # ---- stage 0: hoist every host->device conversion, once ----------
+        self._lut_nodes = graph.act_luts()
+        self._luts = {name: jnp.asarray(n.table(), jnp.int32)
+                      for name, n in self._lut_nodes.items()}
+        self._params = {
+            n.name: (jnp.asarray(n.weight_int(), jnp.int32),
+                     jnp.asarray(n.bias_int(), jnp.int32))
+            for n in graph.nodes
+            if isinstance(n, (LinearNode, LSTMCellNode))}
+        self._specs = {
+            n.name: CellSpec(
+                seq_len=n.seq_len, d_in=n.d_in, hidden=n.hidden,
+                act_fmt=n.act_fmt, state_fmt=n.state_fmt, w_fmt=n.w_fmt,
+                sig_lo=self._lut_nodes[n.sigmoid_lut].lo,
+                tanh_lo=self._lut_nodes[n.tanh_lut].lo)
+            for n in graph.nodes if isinstance(n, LSTMCellNode)}
+        # ---- compiled-program cache: (shape, dtype) -> jitted graph walk -
+        self._programs: "OrderedDict" = OrderedDict()
+        self._max_programs = max_programs
+        self.trace_count = 0             # how many times the walk was traced
 
     # -- primitive schedules -------------------------------------------------
-    def _mac(self, xh, w, b, *, shift, fmt: FxpFormat):
-        if self.use_pallas:
-            return mac_int_pallas(xh, w, b, shift=shift, lo=fmt.lo,
-                                  hi=fmt.hi, interpret=self._interpret)
-        return _mac_int_jnp(xh, w, b, shift=shift, lo=fmt.lo, hi=fmt.hi)
+    def _mac(self, xh, w, b, *, shift, fmt: FxpFormat, mode: str):
+        if mode == "jnp":
+            return _mac_int_jnp(xh, w, b, shift=shift, lo=fmt.lo, hi=fmt.hi)
+        return mac_int_pallas(xh, w, b, shift=shift, lo=fmt.lo,
+                              hi=fmt.hi, interpret=self._interpret)
 
     def _lookup(self, lut_name: str, codes: jax.Array) -> jax.Array:
         node = self._lut_nodes[lut_name]
-        return jnp.take(self._luts[lut_name], codes - node.in_fmt.lo)
+        return jnp.take(self._luts[lut_name], codes - node.lo)
 
-    def _linear(self, n: LinearNode, x_int: jax.Array) -> jax.Array:
-        w = jnp.asarray(n.weight_int(), jnp.int32)
-        b = jnp.asarray(n.bias_int(), jnp.int32)
+    def _linear(self, n: LinearNode, x_int: jax.Array,
+                mode: str) -> jax.Array:
+        w, b = self._params[n.name]
         shift = n.in_fmt.frac_bits + n.w_fmt.frac_bits - n.out_fmt.frac_bits
         return self._mac(x_int.astype(jnp.int32), w, b, shift=shift,
-                         fmt=n.out_fmt)
+                         fmt=n.out_fmt, mode=mode)
 
-    def _lstm_cell(self, n: LSTMCellNode, x_int: jax.Array) -> jax.Array:
+    def _lstm_cell(self, n: LSTMCellNode, x_int: jax.Array,
+                   mode: str) -> jax.Array:
+        w, b = self._params[n.name]
+        if mode == "fused":
+            return lstm_window_int(
+                x_int.astype(jnp.int32), w, b,
+                self._luts[n.sigmoid_lut], self._luts[n.tanh_lut],
+                spec=self._specs[n.name])
         B = x_int.shape[0]
         A, C = n.act_fmt, n.state_fmt
-        af, wf, cf = A.frac_bits, n.w_fmt.frac_bits, C.frac_bits
-        H = n.hidden
-        w = jnp.asarray(n.weight_int(), jnp.int32)
-        b = jnp.asarray(n.bias_int(), jnp.int32)
-        h = jnp.zeros((B, H), jnp.int32)
-        c = jnp.zeros((B, H), jnp.int32)
+        af, cf = A.frac_bits, C.frac_bits
+        h = jnp.zeros((B, n.hidden), jnp.int32)
+        c = jnp.zeros((B, n.hidden), jnp.int32)
         outs = []
         for t in range(n.seq_len):
             xh = jnp.concatenate([x_int[:, t].astype(jnp.int32), h], axis=-1)
-            z = self._mac(xh, w, b, shift=wf, fmt=A)       # acc -> act fmt
+            z = self._mac(xh, w, b, shift=n.mac_shift, fmt=A, mode=mode)
             i, f, g, o = jnp.split(z, 4, axis=-1)
             si = self._lookup(n.sigmoid_lut, i)
             sf = self._lookup(n.sigmoid_lut, f)
             so = self._lookup(n.sigmoid_lut, o)
             tg = self._lookup(n.tanh_lut, g)
             # align si*tg (scale 2·af) to sf*c (scale af+cf): << (cf - af)
-            term = sf * c + jax.lax.shift_left(si * tg, cf - af)
+            term = sf * c + jax.lax.shift_left(si * tg, n.state_align_shift)
             c = fxp_requant_int(term, af + cf, C)
             c_a = fxp_requant_int(c, cf, A)
             tc = self._lookup(n.tanh_lut, c_a)
@@ -151,10 +201,10 @@ class RTLEmulator:
         b = jax.lax.shift_left(b, hi - fb)
         return fxp_requant_int(a + b, hi, n.out_fmt)
 
-    # -- graph walk ----------------------------------------------------------
-    def run_int(self, x_int: jax.Array) -> EmulationResult:
+    # -- graph walk (traced once per shape, then replayed) -------------------
+    def _execute(self, x_int: jax.Array, *, mode: str) -> Dict[str, jax.Array]:
         g = self.graph
-        env: Dict[str, jax.Array] = {g.inputs[0]: jnp.asarray(x_int)}
+        env: Dict[str, jax.Array] = {g.inputs[0]: x_int}
         for n in g.nodes:
             if isinstance(n, ActLUTNode):
                 continue
@@ -162,26 +212,93 @@ class RTLEmulator:
             if isinstance(n, LSTMCellNode):
                 # a stacked cell consumes the previous cell's full sequence
                 src = env.get(n.inputs[0] + ".seq", src)
-                seq = self._lstm_cell(n, src)
+                seq = self._lstm_cell(n, src, mode)
                 env[n.outputs[0]] = seq[:, -1]
                 env[n.outputs[0] + ".seq"] = seq
             elif isinstance(n, LinearNode):
-                env[n.outputs[0]] = self._linear(n, src)
+                env[n.outputs[0]] = self._linear(n, src, mode)
             elif isinstance(n, ActApplyNode):
                 env[n.outputs[0]] = self._lookup(n.lut, src)
             elif isinstance(n, ElementwiseNode):
                 env[n.outputs[0]] = self._elementwise(
                     n, src, env[n.inputs[1]])
-        out_edge = g.edges[g.outputs[0]]
-        y = env[g.outputs[0]]
+        return env
+
+    def _program(self, shape, dtype):
+        """The compiled graph walk for one (shape, dtype), LRU-cached."""
+        key = (tuple(shape), jnp.dtype(dtype).name)
+        prog = self._programs.pop(key, None)
+        if prog is None:
+            def walk(x_int):
+                self.trace_count += 1        # python side effect: trace-time
+                return self._execute(x_int, mode=self.mode)
+
+            prog = jax.jit(walk)
+            while len(self._programs) >= self._max_programs:
+                self._programs.popitem(last=False)
+        self._programs[key] = prog           # (re)insert most-recently-used
+        return prog
+
+    def _result(self, env: Dict[str, jax.Array]) -> EmulationResult:
+        out_edge = self.graph.edges[self.graph.outputs[0]]
+        y = env[self.graph.outputs[0]]
         return EmulationResult(outputs=y,
                                outputs_f=y.astype(jnp.float32)
                                / out_edge.fmt.scale,
                                trace=env)
 
+    def run_int(self, x_int: jax.Array) -> EmulationResult:
+        x_int = jnp.asarray(x_int)
+        env = self._program(x_int.shape, x_int.dtype)(x_int)
+        return self._result(env)
+
     def run(self, x: jax.Array) -> EmulationResult:
         in_fmt = self.graph.edges[self.graph.inputs[0]].fmt
         return self.run_int(
+            jnp.asarray(fxp_to_int(x, in_fmt), jnp.int32))
+
+    # -- batched-throughput entry -------------------------------------------
+    def run_many(self, xs: Union[jax.Array, Sequence[jax.Array]]
+                 ) -> Union[EmulationResult, List[EmulationResult]]:
+        """Many independent float windows in ONE compiled dispatch.
+
+        A plain array is treated as an already-stacked batch (same as
+        :meth:`run`). A list/tuple of ``(B_i, ...)`` windows is concatenated
+        along batch, executed once, and split back into one
+        :class:`EmulationResult` per input — rows are independent, so each
+        result is bit-identical to running its window alone. Note distinct
+        *total* batch sizes compile distinct programs (the LRU absorbs the
+        usual handful of shapes).
+        """
+        if not isinstance(xs, (list, tuple)):
+            return self.run(xs)
+        xs = [jnp.asarray(x) for x in xs]
+        sizes = [int(x.shape[0]) for x in xs]
+        res = self.run(jnp.concatenate(xs, axis=0))
+        out, off = [], 0
+        for s in sizes:
+            sl = slice(off, off + s)
+            off += s
+            out.append(EmulationResult(
+                outputs=res.outputs[sl], outputs_f=res.outputs_f[sl],
+                trace={k: v[sl] for k, v in res.trace.items()}))
+        return out
+
+    # -- legacy per-step schedule (the PR-1 dispatch pattern) ----------------
+    def run_int_per_step(self, x_int: jax.Array) -> EmulationResult:
+        """Un-jitted eager walk, one MAC dispatch per timestep per cell.
+
+        This is the pre-fusion execution schedule, kept as the benchmark
+        baseline and as an extra cross-check path (it still uses the hoisted
+        device constants, so any speed difference is pure dispatch/trace
+        overhead, not upload traffic).
+        """
+        mode = "jnp" if self.mode == "jnp" else "pallas"
+        return self._result(self._execute(jnp.asarray(x_int), mode=mode))
+
+    def run_per_step(self, x: jax.Array) -> EmulationResult:
+        in_fmt = self.graph.edges[self.graph.inputs[0]].fmt
+        return self.run_int_per_step(
             jnp.asarray(fxp_to_int(x, in_fmt), jnp.int32))
 
 
@@ -246,9 +363,9 @@ def reference_apply(graph: Graph, x: jax.Array) -> jax.Array:
 
 
 def assert_bit_exact(graph: Graph, x: jax.Array,
-                     use_pallas: bool = True) -> None:
+                     use_pallas: bool = True, mode: str = None) -> None:
     """Raises AssertionError on the first integer mismatch (test helper)."""
-    res = RTLEmulator(graph, use_pallas=use_pallas).run(x)
+    res = RTLEmulator(graph, use_pallas=use_pallas, mode=mode).run(x)
     ref = reference_apply(graph, x)
     fmt = graph.edges[graph.outputs[0]].fmt
     ref_int = np.asarray(jnp.round(ref * fmt.scale), np.int64)

@@ -117,6 +117,16 @@ class LSTMCellNode(Node):
         bfmt = FxpFormat(32, self.act_fmt.frac_bits + self.w_fmt.frac_bits)
         return np.asarray(fxp_to_int(self.bias, bfmt))
 
+    @property
+    def mac_shift(self) -> int:
+        """Right-shift taking the gate accumulator (scale A.f+W.f) to A."""
+        return self.w_fmt.frac_bits
+
+    @property
+    def state_align_shift(self) -> int:
+        """Left-shift aligning σi·tg (scale 2·A.f) to σf·c (A.f+C.f)."""
+        return self.state_fmt.frac_bits - self.act_fmt.frac_bits
+
 
 @dataclass
 class ActLUTNode(Node):
@@ -143,6 +153,11 @@ class ActLUTNode(Node):
     @property
     def depth(self) -> int:
         return 2 ** self.in_fmt.total_bits
+
+    @property
+    def lo(self) -> int:
+        """Address offset: table is indexed by ``code - lo``."""
+        return self.in_fmt.lo
 
 
 @dataclass
@@ -180,6 +195,10 @@ class Graph:
             if n.name == name:
                 return n
         raise KeyError(name)
+
+    def act_luts(self) -> Dict[str, "ActLUTNode"]:
+        """The shared ROM nodes, by name — the tables an executor preloads."""
+        return {n.name: n for n in self.nodes if isinstance(n, ActLUTNode)}
 
     def total_macs(self) -> int:
         return sum(n.macs() for n in self.nodes)

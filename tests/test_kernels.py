@@ -8,6 +8,9 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.lstm_cell.ops import lstm_window
 from repro.kernels.lstm_cell.ref import lstm_window_ref
+from repro.kernels.lstm_cell_int import (CellSpec, lstm_window_int,
+                                         lstm_window_int_ref)
+from repro.quant.fixedpoint import FxpFormat
 from repro.kernels.mamba2.ops import ssd
 from repro.kernels.quant_matmul.ops import quant_matmul
 from repro.kernels.quant_matmul.ref import quant_matmul_ref, quantize_act
@@ -83,6 +86,49 @@ def test_lstm_window(shape):
     err = float(jnp.max(jnp.abs(lstm_window(x, w, b)
                                 - lstm_window_ref(x, w, b))))
     assert err < 1e-5, err
+
+
+# --------------------------------------------------------------------------
+def test_template_registry_matches_packages():
+    """kernels.TEMPLATES lists exactly the template packages on disk, and
+    each follows the kernel.py/ops.py/ref.py layout (ref optional)."""
+    import importlib
+    import pathlib
+
+    import repro.kernels as K
+
+    pkg_dir = pathlib.Path(K.__file__).parent
+    on_disk = sorted(p.parent.name for p in pkg_dir.glob("*/kernel.py"))
+    assert sorted(K.TEMPLATES) == on_disk
+    for name in K.TEMPLATES:
+        importlib.import_module(f"repro.kernels.{name}.kernel")
+        importlib.import_module(f"repro.kernels.{name}.ops")
+
+
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1, 6, 1, 20), (7, 6, 3, 16),
+                                   (64, 4, 2, 8), (200, 6, 1, 20)])
+def test_lstm_window_int(shape):
+    """Fused integer window vs the per-step oracle: EXACT int equality."""
+    import numpy as np
+
+    B, S, din, hid = shape
+    A, W, C = FxpFormat(8, 4), FxpFormat(8, 6), FxpFormat(16, 8)
+    spec = CellSpec(seq_len=S, d_in=din, hidden=hid, act_fmt=A, state_fmt=C,
+                    w_fmt=W, sig_lo=A.lo, tanh_lo=A.lo)
+    rng = np.random.default_rng(B + S)
+    x = jnp.asarray(rng.integers(A.lo, A.hi + 1, (B, S, din)), jnp.int32)
+    w = jnp.asarray(rng.integers(W.lo, W.hi + 1, (din + hid, 4 * hid)),
+                    jnp.int32)
+    b = jnp.asarray(rng.integers(-(1 << 10), 1 << 10, (4 * hid,)), jnp.int32)
+    # arbitrary in-range ROMs: exercises the gathers, not the activations
+    depth = 2 ** A.total_bits
+    sig = jnp.asarray(rng.integers(A.lo, A.hi + 1, depth), jnp.int32)
+    tanh = jnp.asarray(rng.integers(A.lo, A.hi + 1, depth), jnp.int32)
+    y_k = lstm_window_int(x, w, b, sig, tanh, spec=spec)
+    y_r = lstm_window_int_ref(x, w, b, sig, tanh, spec=spec)
+    assert y_k.dtype == jnp.int32 and y_k.shape == (B, S, hid)
+    assert np.array_equal(np.asarray(y_k), np.asarray(y_r))
 
 
 # --------------------------------------------------------------------------

