@@ -44,7 +44,7 @@ def run(batches=DEFAULT_BATCHES, *, n_fused: int = 20, n_per_step: int = 3,
 
     cr = Creator(hw=XC7S15)
     st = cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
-    _, exe = cr.translate(st, backend="rtl")
+    _, exe = cr.translate(st, target="rtl")
     fused = exe.emulator                     # staged executor, mode="fused"
     per_step = RTLEmulator(exe.graph, mode="pallas")   # PR-1 schedule
 

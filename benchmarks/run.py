@@ -42,7 +42,7 @@ def main() -> None:
     _cr = Creator(hw=XC7S15)
     _st = _cr.build(_get("elastic-lstm"), SHAPES_LSTM["infer_1"])
     _flops = float(lstm_flops(_get("elastic-lstm")))
-    _syn, _exe = _cr.translate(_st, backend="rtl", model_flops=_flops)
+    _syn, _exe = _cr.translate(_st, target="rtl", model_flops=_flops)
     _x = _jax.random.normal(_jax.random.PRNGKey(0), (1, 6, 1))
     _exe(_x)                       # warm: compile the fused program once
     emu_us = _timeit(lambda: _jax.block_until_ready(_exe(_x)), n=5)
@@ -50,8 +50,8 @@ def main() -> None:
     per_step_us = _timeit(
         lambda: _jax.block_until_ready(
             _exe.emulator.run_per_step(_x).outputs), n=3)
-    _meas = _cr.measure_rtl(_exe, _x, model="elastic-lstm",
-                            model_flops=_flops)
+    _meas = _exe.measure((_x,), model="elastic-lstm",
+                         model_flops=_flops, n_runs=5)
     print(f"artifacts: {_syn.n_artifacts}  cycles: "
           f"{_syn.resources['cycles']}  est: {_syn.est_latency_s*1e6:.2f} us "
           f"@ {_syn.est_power_w*1e3:.1f} mW -> {_syn.est_gop_per_j:.2f} GOP/J"

@@ -3,13 +3,17 @@ traffic-flow LSTM — design/QAT-train -> translate+estimate -> deploy+measure,
 with the feedback loop widening the fixed-point format until the requirement
 is met (what the PerCom audience would do interactively).
 
-    PYTHONPATH=src python examples/elastic_workflow.py            # XLA loop
-    PYTHONPATH=src python examples/elastic_workflow.py --backend rtl
+    PYTHONPATH=src python examples/elastic_workflow.py               # XLA loop
+    PYTHONPATH=src python examples/elastic_workflow.py --target rtl
 
-With ``--backend rtl`` the loop's stage 2/3 run against the *generated
+With ``--target rtl`` the loop's stage 2/3 run against the *generated
 accelerator*: template artifacts are emitted and the bit-exact emulator's
-cycle schedule provides the measurement. Either way, the script finishes by
-"pressing the button" — translating the final design to RTL artifacts.
+cycle schedule provides the measurement. Both targets drive the same
+``Workflow.run_once`` — the target registry resolves the substrate, and the
+RTL target's own ``options_from_knobs`` clamps the knobs to the exactness
+envelope (no per-script format plumbing needed). Either way, the script
+finishes by "pressing the button" — translating the final design to RTL
+artifacts through the registry.
 """
 import jax
 import jax.numpy as jnp
@@ -17,6 +21,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core.creator import Creator
 from repro.core.report import DesignReport
+from repro.core.target import get_target, list_targets
 from repro.core.workflow import Requirement, Workflow
 from repro.data.pipeline import TrafficConfig, traffic_flow_batch
 from repro.model.layers import init_params
@@ -24,6 +29,8 @@ from repro.model.lstm import lstm_flops, lstm_schema
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 from repro.quant.fixedpoint import FxpFormat
 from repro.quant.qat import QATConfig, make_qat_loss, make_qat_lstm_apply
+
+TRAIN_STEPS = 120
 
 
 def train_fn(knobs):
@@ -46,7 +53,7 @@ def train_fn(knobs):
         p2, o2, _ = adamw_update(g, o, p, ocfg)
         return p2, o2, loss
 
-    for i in range(120):
+    for i in range(TRAIN_STEPS):
         params, opt, loss = step(params, opt)
     ev = traffic_flow_batch(TrafficConfig(batch=256, seed=9), 1)
     apply = make_qat_lstm_apply(cfg, qcfg)
@@ -85,34 +92,35 @@ def optimizer(history):
 def main():
     import argparse
 
+    global TRAIN_STEPS
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--backend", choices=["xla", "rtl"], default="xla")
-    backend = ap.parse_args().backend
+    ap.add_argument("--target", "--backend", dest="target",
+                    choices=sorted(list_targets()), default="xla",
+                    help="registered deployment target (--backend is the "
+                         "legacy spelling)")
+    ap.add_argument("--max-iters", type=int, default=4,
+                    help="feedback-loop budget (CI smoke uses 1)")
+    ap.add_argument("--train-steps", type=int, default=TRAIN_STEPS,
+                    help="stage-1 training steps per iteration")
+    args = ap.parse_args()
+    target = args.target
+    TRAIN_STEPS = args.train_steps
     from repro.core.types import SHAPES_LSTM
     from repro.energy.hw import XC7S15
 
     cfg = get_config("elastic-lstm")
-    creator = Creator(hw=XC7S15) if backend == "rtl" else Creator()
+    creator = Creator(hw=XC7S15) if target == "rtl" else Creator()
 
     def stepper_builder(knobs):
         return creator.build(cfg, SHAPES_LSTM["infer_1"])
 
-    def fmt_builder(knobs):
-        # clamp to the RTL exactness envelope (DESIGN.md §4): the DSP path
-        # caps weights at 12 bits and LUT inputs at 9
-        wb = min(knobs["bits"], 12)
-        ab = min(knobs["bits"], 9)
-        return {"w_fmt": FxpFormat(wb, min(knobs["frac"], wb - 1)),
-                "act_fmt": FxpFormat(
-                    ab, min(max(0, knobs["frac"] - 2), ab - 1, 8))}
-
     wf = Workflow(creator=creator, train_fn=train_fn,
-                  step_builder=step_builder, backend=backend,
-                  stepper_builder=stepper_builder if backend == "rtl"
-                  else None,
-                  fmt_builder=fmt_builder if backend == "rtl" else None)
+                  step_builder=step_builder, target=target,
+                  stepper_builder=stepper_builder if target == "rtl"
+                  else None)
     req = Requirement(max_eval_loss=0.01, max_latency_s=1.0)
-    hist = wf.run(req, optimizer, {"bits": 4, "frac": 2}, max_iters=4)
+    hist = wf.run(req, optimizer, {"bits": 4, "frac": 2},
+                  max_iters=args.max_iters)
     print(f"\n{'it':>3} {'fmt':>7} {'eval':>8} {'est_ms':>8} {'meas_ms':>8} "
           f"{'est_uJ':>8} {'GOP/J':>7} {'ok':>3}")
     for r in hist:
@@ -129,15 +137,18 @@ def main():
     # --- "press the button": translate the final design to RTL ----------- #
     best = hist[-1].knobs
     params, _, _ = train_fn(best)
-    st = Creator(hw=XC7S15).build(cfg, SHAPES_LSTM["infer_1"])
-    syn, exe = Creator(hw=XC7S15).translate(
-        st, backend="rtl", params=params, **fmt_builder(best))
+    rtl = get_target("rtl")
+    creator_rtl = Creator(hw=XC7S15)
+    st = creator_rtl.build(cfg, SHAPES_LSTM["infer_1"])
+    syn, dep = creator_rtl.translate(
+        st, target="rtl", params=params,
+        options=rtl.options_from_knobs(best))
     print(f"\nRTL translate: {syn.n_artifacts} artifacts, "
           f"{syn.resources['cycles']} cycles "
           f"({syn.est_latency_s*1e6:.2f} us @ 100 MHz), "
           f"dsp={syn.resources['dsp']} bram36={syn.resources['bram36']} "
           f"lut={syn.resources['lut']}, fits={syn.fits}")
-    for name in sorted(exe.artifacts):
+    for name in sorted(dep.artifacts):
         print(f"  - {name}")
 
 

@@ -4,13 +4,16 @@
 
 1. pick a registered architecture (reduced config),
 2. train a few steps on the synthetic corpus,
-3. "press the button": translate -> SynthesisReport (the Vivado analogue),
+3. "press the button": translate via the deployment-target registry ->
+   (SynthesisReport, Deployment) — the report is the Vivado analogue, the
+   Deployment the uniform deployable artifact (callable/measurable/savable),
 4. serve a few batched requests from the trained weights.
 """
 import jax
 
 from repro.configs import get_config
 from repro.core.creator import Creator
+from repro.core.target import list_targets
 from repro.core.types import SMOKE_MESH, ParallelismConfig, ShapeConfig
 from repro.data.pipeline import LMDataConfig, lm_batch_for_step
 from repro.model.lm import Stepper
@@ -21,6 +24,7 @@ def main():
     cfg = get_config("yi-9b", smoke=True)
     par = ParallelismConfig(compute_dtype="float32")
     creator = Creator()
+    print("deployment targets registered:", list_targets())
     print("components used:", sorted(creator.validate(cfg)))
 
     # --- stage 1: design/train ------------------------------------------
@@ -35,10 +39,12 @@ def main():
             print(f"step {i:3d} loss {float(m['loss']):.3f}")
 
     # --- stage 2: translate + estimation report ---------------------------
-    syn, _ = creator.translate(st)
+    syn, dep = creator.translate(st)
     print(f"\nSynthesisReport: fits={syn.fits} "
           f"est_latency={syn.est_latency_s*1e3:.2f} ms "
           f"bottleneck={syn.bottleneck}")
+    print(f"Deployment: target={dep.target!r} "
+          f"(uniform artifact: callable / .measure / .save)")
     print("per-channel seconds:",
           {k: f"{v*1e6:.0f}us" for k, v in syn.channels.items()})
 

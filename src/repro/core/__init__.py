@@ -1,3 +1,11 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# The deployment-target API (DESIGN.md §8) is re-exported here as the
+# public surface: register a Target, translate through the registry, get
+# back the uniform Deployment artifact.
+from repro.core.target import (DEFAULT_N_RUNS, Deployment,  # noqa: F401
+                               Target, TargetOptions, XLADeployment,
+                               XLAOptions, get_target, list_targets,
+                               register_lazy_target, register_target)

@@ -2,31 +2,34 @@
 
 The paper: *"the trained and optimized model can be translated to a hardware
 accelerator in the RTL representation by simply pressing a button"*. Here the
-button is :meth:`Creator.translate` — ``jax.jit(step).lower().compile()``
-against the target mesh — and the returned :class:`SynthesisReport` is the
-Vivado-estimation analogue (resource utilization from ``memory_analysis``,
-timing/power from the roofline + 8-channel meter).
+button is :meth:`Creator.translate` — a thin dispatcher over the
+deployment-target registry (:mod:`repro.core.target`). Every registered
+target turns a built stepper into the same two artifacts: a
+:class:`SynthesisReport` (the Vivado-estimation analogue) and a
+:class:`~repro.core.target.Deployment` (callable, measurable, savable).
 
 No FPGA knowledge needed from the developer: pick a registered arch config
-(or compose one from registered components), call ``translate``, read the
-report, iterate (see :mod:`repro.core.workflow`).
+(or compose one from registered components), call ``translate`` with a
+target name, read the report, iterate (see :mod:`repro.core.workflow`).
+The pre-registry spellings — ``translate(st, backend="rtl", **rtl_formats)``
+and :meth:`Creator.measure_rtl` — still work but emit a
+``DeprecationWarning`` and forward to the registry path.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
-
-import jax
-import numpy as np
+import dataclasses
+import warnings
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
 
 from repro.core import registry
 from repro.core.report import MeasurementReport, SynthesisReport
+from repro.core.target import (DEFAULT_N_RUNS, Deployment, TargetOptions,
+                               XLADeployment, get_target,
+                               model_flops_estimate)
 from repro.core.types import (MeshConfig, ModelConfig, ParallelismConfig,
                               ShapeConfig, SMOKE_MESH)
 from repro.energy.hw import HWSpec, TPU_V5E
-from repro.energy.meter import meter_channels
-from repro.energy.roofline import roofline
 from repro.model.lm import Stepper
 
 
@@ -50,166 +53,86 @@ class Creator:
     # ------------------------------------------------------------------ #
     # Stage 2: translate (= synthesize) + estimation report
     # ------------------------------------------------------------------ #
-    def translate(self, st: Stepper, *, kind: Optional[str] = None,
+    def translate(self, st: Stepper, *, target="xla",
+                  options: Optional[TargetOptions] = None,
+                  params=None, kind: Optional[str] = None,
                   model_flops: Optional[float] = None,
-                  backend: str = "xla", params=None, **rtl_formats):
-        """Returns (SynthesisReport, compiled_executable).
+                  backend: Optional[str] = None,
+                  **rtl_formats) -> Tuple[SynthesisReport, Deployment]:
+        """Press the button: returns (SynthesisReport, Deployment).
 
-        ``backend="xla"`` (default) lowers through jit/XLA against the TPU
-        HWSpec.  ``backend="rtl"`` runs the ElasticAI-Creator codegen
-        analogue instead: lower to the fixed-point dataflow IR, emit the
-        VHDL-like template artifacts, and return an
-        :class:`~repro.rtl.backend.RTLExecutable` whose bit-exact integer
-        emulator stands in for the deployed accelerator. ``params`` (trained
-        weights), Q-format kwargs (``w_fmt``/``act_fmt``/``state_fmt``) and
-        ``emulator_mode`` ("fused" single-dispatch kernel, default, or the
-        "pallas"/"jnp" per-step cross-check schedules) are only meaningful
-        for the RTL backend.
+        ``target`` is a registered target name (``"xla"``, ``"rtl"``, ...;
+        see :func:`repro.core.target.list_targets`) or a Target instance.
+        Target-specific knobs ride in ``options`` — the target's options
+        dataclass (e.g. ``RTLOptions(w_fmt=..., emulator_mode=...)``);
+        ``None`` means the target's defaults. ``params`` are the trained
+        weights (targets that need them initialize from the stepper when
+        omitted). ``kind`` / ``model_flops`` are convenience spellings for
+        the matching options fields; precedence: a value already set on
+        ``options`` wins over the loose argument, and ``kind`` is ignored
+        by targets whose options have no ``kind`` field (the RTL target
+        always lowers the full model graph, as before the redesign).
+
+        ``backend=`` and loose Q-format kwargs are the deprecated PR-1/2
+        spelling; they forward here after a ``DeprecationWarning``.
         """
-        if backend == "rtl":
-            from repro.energy.hw import XC7S15
-            from repro.rtl.backend import translate_rtl
+        if backend is not None or rtl_formats:
+            warnings.warn(
+                "Creator.translate(backend=..., **rtl_formats) is "
+                "deprecated; use translate(st, target=..., "
+                "options=<TargetOptions>)", DeprecationWarning, stacklevel=2)
+            target = backend or target
+            if rtl_formats:
+                if target != "rtl":
+                    raise TypeError(
+                        f"unexpected kwargs {sorted(rtl_formats)} for "
+                        f"target {target!r}")
+                if options is not None:
+                    raise TypeError(
+                        "pass either options= or loose Q-format kwargs "
+                        f"({sorted(rtl_formats)}), not both — the loose "
+                        "kwargs would silently rebuild options from "
+                        "defaults")
+                from repro.rtl.backend import RTLOptions
 
-            if params is None:
-                params, _ = st.init()
-            if model_flops is None:
-                from repro.launch.dryrun import model_flops_estimate
-
-                model_flops = model_flops_estimate(st.cfg, st.shape)
-            hw = self.hw if self.hw.clock_hz else XC7S15
-            return translate_rtl(st.cfg, params, hw=hw,
-                                 model_flops=model_flops, **rtl_formats)
-        if backend != "xla":
-            raise ValueError(f"unknown backend {backend!r}; "
-                             f"expected 'xla' or 'rtl'")
-        kind = kind or st.shape.kind
-        abstract = st.abstract_inputs()
-        if st.mesh is not None:
-            from jax.sharding import NamedSharding
-            from repro.model.layers import tree_map_pspec
-            from repro.model.lm import batch_pspecs
-            from repro.optim.adamw import opt_state_schema
-
-            param_sh = st.shardings(st.schema)
-            bspecs = batch_pspecs(st.cfg, st.shape, st.mesh_cfg)
-            batch_sh = {k: NamedSharding(st.mesh, v)
-                        for k, v in bspecs.items()}
-            ctxmgr = st.mesh
-        else:
-            param_sh = batch_sh = None
-            import contextlib
-
-            ctxmgr = contextlib.nullcontext()
-
-        t0 = time.time()
-        with ctxmgr:
-            if kind == "train":
-                if param_sh is not None:
-                    from jax.sharding import NamedSharding
-                    from repro.model.layers import tree_map_pspec
-                    from repro.optim.adamw import opt_state_schema
-
-                    opt_sh = tree_map_pspec(
-                        lambda s: NamedSharding(st.mesh, s.pspec),
-                        opt_state_schema(st.schema, st.mesh_cfg))
-                    fn = jax.jit(st.train_fn(),
-                                 in_shardings=(param_sh, opt_sh, batch_sh),
-                                 donate_argnums=(0, 1))
-                else:
-                    fn = jax.jit(st.train_fn(), donate_argnums=(0, 1))
-                lowered = fn.lower(abstract["params"], abstract["opt_state"],
-                                   abstract["batch"])
-            elif kind == "prefill":
-                fn = jax.jit(st.prefill_fn()) if param_sh is None else jax.jit(
-                    st.prefill_fn(), in_shardings=(param_sh, batch_sh))
-                lowered = fn.lower(abstract["params"], abstract["batch"])
-            else:
-                if param_sh is not None:
-                    from jax.sharding import NamedSharding
-                    from repro.model.layers import tree_map_pspec
-
-                    cache_sh = tree_map_pspec(
-                        lambda s: NamedSharding(st.mesh, s.pspec),
-                        st.cache_schema())
-                    fn = jax.jit(st.decode_fn(),
-                                 in_shardings=(param_sh,
-                                               batch_sh["tokens"], cache_sh),
-                                 donate_argnums=(2,))
-                else:
-                    fn = jax.jit(st.decode_fn(), donate_argnums=(2,))
-                lowered = fn.lower(abstract["params"],
-                                   abstract["batch"]["tokens"],
-                                   abstract["cache"])
-            compiled = lowered.compile()
-        compile_s = time.time() - t0
-
-        cost = compiled.cost_analysis()
-        mem = compiled.memory_analysis()
-        hlo = compiled.as_text()
-        n_dev = st.mesh.size if st.mesh is not None else 1
-
-        if model_flops is None:
-            from repro.launch.dryrun import model_flops_estimate
-
+                options = RTLOptions(**rtl_formats)
+        tgt = get_target(target)
+        if options is None:
+            options = tgt.options_cls()
+        if not isinstance(options, tgt.options_cls):
+            raise TypeError(
+                f"target {tgt.name!r} expects options of type "
+                f"{tgt.options_cls.__name__}, got "
+                f"{type(options).__name__}")
+        if kind is not None and hasattr(options, "kind"):
+            options = dataclasses.replace(options, kind=kind)
+        if model_flops is None and options.model_flops is None:
             model_flops = model_flops_estimate(st.cfg, st.shape)
-        rep = roofline(arch=st.cfg.name, shape=st.shape.name,
-                       mesh=f"{n_dev}dev", n_devices=n_dev, cost=cost,
-                       hlo_text=hlo, model_flops=model_flops, hw=self.hw)
-        ch = meter_channels(hlo, n_dev, self.hw)
-
-        peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
-                + mem.output_size_in_bytes - mem.alias_size_in_bytes)
-        est_latency = rep.step_s
-        est_energy = ch.total_joules + self.hw.idle_w * est_latency
-        gop = 2.0 * model_flops / 1e9 / max(n_dev, 1)  # OP = 2×MAC convention
-        return SynthesisReport(
-            model=st.cfg.name, target=self.hw.name,
-            argument_bytes=mem.argument_size_in_bytes,
-            output_bytes=mem.output_size_in_bytes,
-            temp_bytes=mem.temp_size_in_bytes,
-            fits=peak <= self.hw.hbm_bytes,
-            utilization=peak / self.hw.hbm_bytes,
-            flops=rep.flops_per_device, bytes_accessed=rep.bytes_per_device,
-            wire_bytes=rep.wire_bytes_per_device,
-            est_latency_s=est_latency,
-            est_power_w=est_energy / est_latency if est_latency else 0.0,
-            est_energy_j=est_energy,
-            est_gop_per_j=(rep.model_flops / 1e9) / est_energy / max(n_dev, 1)
-            if est_energy else 0.0,
-            bottleneck=rep.bottleneck,
-            channels=ch.seconds, channel_joules=ch.joules,
-            compile_seconds=compile_s), compiled
+        options = options.filled(hw=self.hw, model_flops=model_flops)
+        return tgt.translate(st.cfg, params, st, options)
 
     # ------------------------------------------------------------------ #
     # Stage 3: execute + measure (container hardware = our Elastic Node)
     # ------------------------------------------------------------------ #
     def measure(self, fn, args, *, model: str, model_flops: float,
-                n_runs: int = 20, hw: Optional[HWSpec] = None
+                n_runs: int = DEFAULT_N_RUNS, hw: Optional[HWSpec] = None
                 ) -> MeasurementReport:
-        hw = hw or self.hw
-        out = fn(*args)
-        jax.block_until_ready(out)
-        t0 = time.time()
-        for _ in range(n_runs):
-            out = fn(*args)
-        jax.block_until_ready(out)
-        lat = (time.time() - t0) / n_runs
-        energy = hw.energy_j(lat)
-        return MeasurementReport(
-            model=model, platform="container-cpu(Elastic-Node proxy)",
-            latency_s=lat, power_w=hw.active_w, energy_j=energy,
-            gop_per_j=(model_flops / 1e9) / energy if energy else 0.0,
-            n_runs=n_runs)
+        """Thin wrapper over :meth:`Deployment.measure`: a raw callable is
+        wrapped into an :class:`XLADeployment` on the Creator's HWSpec."""
+        dep = fn if isinstance(fn, Deployment) else XLADeployment(
+            fn=fn, hw=hw or self.hw)
+        return dep.measure(tuple(args), model=model,
+                           model_flops=model_flops, n_runs=n_runs,
+                           hw=hw or getattr(dep, "hw", self.hw))
 
     def measure_rtl(self, exe, x, *, model: str, model_flops: float,
                     hw: Optional[HWSpec] = None,
-                    n_runs: int = 1) -> MeasurementReport:
-        """Stage 3 for the RTL backend: execute the bit-exact emulator (the
-        deployed accelerator's proxy) and read latency/power off its
-        cycle-accurate schedule — emulator cycles × clock, duty-cycled
-        power via :meth:`HWSpec.energy_j`. Repeated measurement replays the
-        emulator's compiled program — no retrace, no weight re-upload."""
-        from repro.rtl.backend import measure_rtl
-
-        return measure_rtl(exe, x, model=model, model_flops=model_flops,
-                           hw=hw, n_runs=n_runs)
+                    n_runs: int = DEFAULT_N_RUNS) -> MeasurementReport:
+        """Deprecated: the RTL Deployment measures itself —
+        ``deployment.measure((x,), model=..., model_flops=...)``."""
+        warnings.warn(
+            "Creator.measure_rtl is deprecated; call "
+            "deployment.measure((x,), ...) on the Deployment returned by "
+            "translate(st, target='rtl')", DeprecationWarning, stacklevel=2)
+        return exe.measure((x,), model=model, model_flops=model_flops,
+                           n_runs=n_runs, hw=hw)

@@ -76,6 +76,7 @@ class MeasurementReport:
     energy_j: float
     gop_per_j: float = 0.0
     n_runs: int = 0
+    target: str = ""                 # deployment-target name ("xla"/"rtl"/…)
     per_channel_j: Dict[str, float] = field(default_factory=dict)
 
     def to_json(self) -> str:

@@ -10,21 +10,27 @@ by an ``optimizer`` callback) until the requirement predicate accepts the
 stage-3 measurement or the tweak budget is exhausted. This same loop, run
 manually against the roofline reports, is the §Perf hillclimbing methodology
 in EXPERIMENTS.md.
+
+Every deployment target runs through the *same* :meth:`Workflow.run_once`:
+stage 2 resolves the target from the registry and translates to the uniform
+:class:`~repro.core.target.Deployment` artifact, stage 3 measures that
+artifact. Target-specific knob mapping lives on the target
+(``Target.options_from_knobs``), overridable per-workflow via
+``options_from_knobs``. The PR-1/2 spellings (``backend=``, ``fmt_builder=``)
+still construct but emit a ``DeprecationWarning`` and forward.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.creator import Creator
 from repro.core.report import (DesignReport, MeasurementReport,
                                SynthesisReport, compare)
-from repro.core.types import ModelConfig, ShapeConfig, SMOKE_MESH
-from repro.energy.hw import HWSpec, TPU_V5E
+from repro.core.target import TargetOptions, XLADeployment, get_target
 
 
 @dataclass
@@ -64,36 +70,75 @@ class Workflow:
     their task into the ElasticAI toolchain:
       train_fn(knobs)  -> (params, DesignReport, apply_fn)
       step_builder(knobs, params) -> (fn, args, model_flops)   # deployable
+    ``target`` names any registered deployment target; targets that must
+    lower the real model graph (e.g. "rtl") additionally need
+    ``stepper_builder``. ``options_from_knobs`` overrides the target's own
+    knob→options mapping.
     """
 
     creator: Creator
     train_fn: Callable[[Dict[str, Any]], Tuple[Any, DesignReport, Any]]
     step_builder: Callable[[Dict[str, Any], Any], Tuple[Any, tuple, float]]
     stepper_builder: Optional[Callable[[Dict[str, Any]], Any]] = None
-    # "xla" measures the jitted step on the container; "rtl" runs the
-    # codegen backend: template artifacts + cycle-accurate emulator
-    # (requires stepper_builder; fmt_builder maps knobs -> Q-format kwargs).
-    backend: str = "xla"
+    target: str = "xla"
+    options_from_knobs: Optional[
+        Callable[[Dict[str, Any]], TargetOptions]] = None
+    # deprecated spellings (forwarded in __post_init__):
+    backend: Optional[str] = None
     fmt_builder: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None
     history: List[WorkflowRecord] = field(default_factory=list)
 
+    def __post_init__(self):
+        if self.backend is not None:
+            warnings.warn("Workflow(backend=...) is deprecated; use "
+                          "Workflow(target=...)", DeprecationWarning,
+                          stacklevel=3)
+            self.target = self.backend
+        if self.fmt_builder is not None:
+            warnings.warn(
+                "Workflow(fmt_builder=...) is deprecated; use "
+                "options_from_knobs returning the target's options "
+                "dataclass (or rely on Target.options_from_knobs)",
+                DeprecationWarning, stacklevel=3)
+            # the old loop only consumed fmt_builder on the RTL fork and
+            # silently ignored it elsewhere — preserve that
+            if self.options_from_knobs is None and self.target == "rtl":
+                fb = self.fmt_builder
+
+                def _from_fmts(knobs: Dict[str, Any]) -> TargetOptions:
+                    from repro.rtl.backend import RTLOptions
+
+                    return RTLOptions(**fb(knobs))
+
+                self.options_from_knobs = _from_fmts
+
     def run_once(self, knobs: Dict[str, Any], it: int = 0) -> WorkflowRecord:
+        """One loop iteration — the single code path for every target."""
         # Stage 1 — design / train / quantize
         params, design, _ = self.train_fn(knobs)
-        if self.backend == "rtl":
-            return self._run_once_rtl(knobs, it, params, design)
-        # Stage 2 — translate + estimate
+        # Stage 2 — translate + estimate via the target registry
+        tgt = get_target(self.target)
+        opts_fn = self.options_from_knobs or tgt.options_from_knobs
+        options = opts_fn(knobs)
+        fn, args, model_flops = self.step_builder(knobs, params)
         if self.stepper_builder is not None:
             st = self.stepper_builder(knobs)
-            syn, _ = self.creator.translate(st)
+            syn, dep = self.creator.translate(
+                st, target=tgt, options=options, params=params,
+                model_flops=model_flops)
+        elif getattr(tgt, "requires_stepper", False):
+            raise ValueError(f"target {tgt.name!r} needs stepper_builder "
+                             f"(the model to lower)")
         else:
-            fn, args, model_flops = self.step_builder(knobs, params)
-            syn = self._synth_from_fn(fn, args, model_flops)
-        # Stage 3 — deploy + measure
-        fn, args, model_flops = self.step_builder(knobs, params)
-        meas = self.creator.measure(jax.jit(fn), args,
-                                    model=design.model,
-                                    model_flops=model_flops)
+            syn = self._synth_from_fn(fn, args, model_flops,
+                                      model=design.model)
+            dep = XLADeployment(fn=None, hw=self.creator.hw)
+        # Stage 3 — deploy + measure through the uniform Deployment artifact.
+        # Host-executed targets time the jitted step fn; self-executing
+        # targets (the RTL emulator) ignore the bind and measure themselves.
+        dep = dep.bind_step(jax.jit(fn)) if fn is not None else dep
+        meas = dep.measure(args, model=design.model,
+                           model_flops=model_flops)
         rec = WorkflowRecord(
             iteration=it, knobs=dict(knobs), design=design, synthesis=syn,
             measurement=meas, est_vs_meas=compare(syn, meas),
@@ -101,29 +146,13 @@ class Workflow:
         self.history.append(rec)
         return rec
 
-    def _run_once_rtl(self, knobs, it, params, design) -> WorkflowRecord:
-        """Stages 2+3 against the generated accelerator instead of XLA."""
-        assert self.stepper_builder is not None, \
-            "backend='rtl' needs stepper_builder (the model to lower)"
-        st = self.stepper_builder(knobs)
-        fmts = self.fmt_builder(knobs) if self.fmt_builder else {}
-        syn, exe = self.creator.translate(st, backend="rtl", params=params,
-                                          **fmts)
-        _, args, model_flops = self.step_builder(knobs, params)
-        meas = self.creator.measure_rtl(exe, args[-1], model=design.model,
-                                        model_flops=model_flops)
-        rec = WorkflowRecord(
-            iteration=it, knobs=dict(knobs), design=design, synthesis=syn,
-            measurement=meas, est_vs_meas=compare(syn, meas),
-            satisfied=False)
-        self.history.append(rec)
-        return rec
-
-    def _synth_from_fn(self, fn, args, model_flops) -> SynthesisReport:
+    def _synth_from_fn(self, fn, args, model_flops, *, model: str = "wf",
+                       arch: Optional[str] = None) -> SynthesisReport:
         from repro.energy.meter import meter_channels
         from repro.energy.roofline import roofline
         import time
 
+        arch = arch or model                 # attribute history to the model
         t0 = time.time()
         lowered = jax.jit(fn).lower(*jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args))
@@ -133,14 +162,14 @@ class Workflow:
         mem = compiled.memory_analysis()
         hlo = compiled.as_text()
         hw = self.creator.hw
-        rep = roofline(arch="wf", shape="wf", mesh="1dev", n_devices=1,
+        rep = roofline(arch=arch, shape="wf", mesh="1dev", n_devices=1,
                        cost=cost, hlo_text=hlo, model_flops=model_flops,
                        hw=hw)
         ch = meter_channels(hlo, 1, hw)
         est_latency = max(rep.step_s, 1e-12)
         est_energy = ch.total_joules + hw.idle_w * est_latency
         return SynthesisReport(
-            model="wf", target=hw.name,
+            model=model, target=hw.name,
             argument_bytes=mem.argument_size_in_bytes,
             output_bytes=mem.output_size_in_bytes,
             temp_bytes=mem.temp_size_in_bytes,

@@ -51,3 +51,15 @@ XC7S15 = HWSpec(
     idle_w=0.010,
     clock_hz=100e6,              # Table I: 100 MHz fabric clock
 )
+
+# Named-spec lookup: Deployment manifests record ``hw`` by name; targets and
+# artifact loaders resolve it back through here.
+HW_BY_NAME = {spec.name: spec for spec in (TPU_V5E, XC7S15)}
+
+
+def get_hw(name: str) -> HWSpec:
+    try:
+        return HW_BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"unknown HWSpec {name!r}; "
+                       f"known: {sorted(HW_BY_NAME)}") from None

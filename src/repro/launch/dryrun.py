@@ -28,21 +28,15 @@ from typing import Optional
 import jax
 
 from repro.configs import ALL_IDS, ARCH_IDS, get_config
+# model_flops_estimate moved to repro.core.target (so the Creator/targets can
+# import it without this module's XLA_FLAGS side effect); re-exported here
+# for callers that learned the old address.
+from repro.core.target import model_flops_estimate  # noqa: F401
 from repro.core.types import (SHAPES, SHAPES_LSTM, MeshConfig,
                               ParallelismConfig, shapes_for)
 from repro.energy.roofline import HEADER, RooflineReport, roofline
 from repro.launch.mesh import make_production_mesh, mesh_config
 from repro.model.lm import Stepper
-
-
-def model_flops_estimate(cfg, shape) -> float:
-    """MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (forward-only serving)."""
-    n = cfg.active_param_count()
-    if shape.kind == "train":
-        return 6.0 * n * shape.tokens
-    if shape.kind == "prefill":
-        return 2.0 * n * shape.tokens
-    return 2.0 * n * shape.global_batch          # decode: one token per seq
 
 
 def _compile_cell(cfg, shape, mcfg, mesh, par):

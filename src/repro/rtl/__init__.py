@@ -5,10 +5,13 @@ Pipeline:  quantized model ──lower──▶ fixed-point dataflow IR (``ir``)
            ``emit``) ──verify──▶ bit-exact int32 emulator (``emulator``)
            ──cost──▶ XC7S15 resource/cycle model (``resources``).
 
-Entry point for users: ``Creator.translate(st, backend="rtl")``; the pieces
-are importable here for direct use and tests.
+Entry point for users: ``Creator.translate(st, target="rtl",
+options=RTLOptions(...))`` — "rtl" resolves to :data:`RTL_TARGET` through the
+deployment-target registry (``repro.core.target``); the pieces are importable
+here for direct use and tests.
 """
-from repro.rtl.backend import (RTLExecutable, measure_rtl,  # noqa: F401
+from repro.rtl.backend import (RTL_TARGET, RTLExecutable,  # noqa: F401
+                               RTLOptions, RTLTarget, measure_rtl,
                                translate_rtl)
 from repro.rtl.emit import emit_graph, write_artifacts  # noqa: F401
 from repro.rtl.emulator import (EmulationResult, RTLEmulator,  # noqa: F401

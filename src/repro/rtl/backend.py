@@ -1,19 +1,22 @@
 """The "press the button" entry point: model -> artifacts + report + emulator.
 
-``translate_rtl`` is what ``Creator.translate(st, backend="rtl")`` delegates
-to: lower the quantized model to the dataflow IR, instantiate the hardware
-templates, cost the design against the FPGA HWSpec, and hand back an
-:class:`RTLExecutable` whose emulator stands in for the deployed accelerator
-in the Workflow's stage-3 measurement (cycles × clock, duty-cycled power).
+``RTL_TARGET`` is the registered deployment target behind
+``Creator.translate(st, target="rtl")`` (DESIGN.md §8): lower the quantized
+model to the dataflow IR, instantiate the hardware templates, cost the design
+against the FPGA HWSpec, and hand back an :class:`RTLExecutable` — the RTL
+flavor of the uniform :class:`~repro.core.target.Deployment` artifact, whose
+bit-exact emulator stands in for the deployed accelerator in the Workflow's
+stage-3 measurement (cycles × clock, duty-cycled power).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 
-from repro.core.report import MeasurementReport
+from repro.core.report import MeasurementReport, SynthesisReport
+from repro.core.target import DEFAULT_N_RUNS, Deployment, TargetOptions
 from repro.core.types import ModelConfig
 from repro.energy.hw import HWSpec, XC7S15
 from repro.quant.fixedpoint import FxpFormat
@@ -22,16 +25,45 @@ from repro.rtl.emulator import RTLEmulator
 from repro.rtl.ir import Graph, lower_model
 from repro.rtl.resources import estimate, synthesize
 
+_EMULATOR_MODES = ("fused", "pallas", "jnp")
+
+
+@dataclass(frozen=True)
+class RTLOptions(TargetOptions):
+    """Translate knobs for the RTL target — the Q-formats the design is
+    quantized to and which emulator schedule executes it. Validation happens
+    at construction so a Workflow knob sweep fails fast, not mid-lowering."""
+
+    w_fmt: FxpFormat = FxpFormat(8, 6)
+    act_fmt: FxpFormat = FxpFormat(8, 4)
+    state_fmt: FxpFormat = FxpFormat(16, 8)
+    emulator_mode: str = "fused"     # "fused" | "pallas" | "jnp"
+
+    def __post_init__(self):
+        if self.emulator_mode not in _EMULATOR_MODES:
+            raise ValueError(f"emulator_mode must be one of "
+                             f"{_EMULATOR_MODES}, got "
+                             f"{self.emulator_mode!r}")
+        for name in ("w_fmt", "act_fmt", "state_fmt"):
+            fmt = getattr(self, name)
+            if not isinstance(fmt, FxpFormat):
+                raise TypeError(f"{name} must be an FxpFormat, got "
+                                f"{type(fmt).__name__}")
+
 
 @dataclass
-class RTLExecutable:
-    """The compiled-artifact analogue returned by ``translate(backend="rtl")``.
+class RTLExecutable(Deployment):
+    """The compiled-artifact analogue returned by ``translate(target="rtl")``.
 
-    Callable like the jitted executables the XLA backend returns: feeding it a
+    Callable like the jitted executables the XLA target returns: feeding it a
     float batch runs the bit-exact emulator and yields dequantized outputs.
     The emulator is the staged executor (DESIGN.md §7): weights live on
     device from construction and repeated calls replay compiled programs, so
     this object is cheap to call in verification/measurement loops.
+
+    As a :class:`Deployment`, it measures itself off the cycle-accurate
+    schedule (``bind_step`` is a no-op — the emulator *is* the deployed
+    design; timing a host-jitted step fn would measure the wrong substrate).
     """
 
     graph: Graph
@@ -39,6 +71,8 @@ class RTLExecutable:
     hw: HWSpec
     emulator_mode: str = "fused"     # "fused" | "pallas" | "jnp"
     emulator: RTLEmulator = field(init=False)
+
+    target = "rtl"
 
     def __post_init__(self):
         self.emulator = RTLEmulator(self.graph, mode=self.emulator_mode)
@@ -55,10 +89,83 @@ class RTLExecutable:
         return estimate(self.graph,
                         clock_hz=self.hw.clock_hz or 100e6).cycles
 
+    def measure(self, args, *, model: str, model_flops: float,
+                n_runs: int = DEFAULT_N_RUNS,
+                hw: Optional[HWSpec] = None) -> MeasurementReport:
+        """Stage 3 on the generated accelerator: execute the emulator (the
+        deployed design's proxy) ``n_runs`` times, then read latency/power
+        off the cycle-accurate schedule — emulator cycles × clock,
+        duty-cycled power via :meth:`HWSpec.energy_j`.
+
+        ``args`` follows the Deployment convention: the trailing positional
+        is the input batch (leading entries, e.g. params from a Workflow
+        step_builder, are already baked into the deployed design). Repeats
+        replay the emulator's compiled program — no retrace, no weight
+        re-upload — so the unified ``n_runs`` default is cheap here too.
+        """
+        x = args[-1] if isinstance(args, (tuple, list)) else args
+        hw = hw or self.hw
+        clock = hw.clock_hz or 100e6
+        rr = estimate(self.graph, clock_hz=clock)
+        n_runs = max(1, n_runs)
+        for _ in range(n_runs):                 # actually execute the design
+            out = self(x)
+        jax.block_until_ready(out)
+        latency = rr.latency_s
+        energy = hw.energy_j(latency, duty=rr.duty)
+        return MeasurementReport(
+            model=model, platform=f"rtl-emulator({hw.name})",
+            latency_s=latency,
+            power_w=energy / latency if latency else 0.0,
+            energy_j=energy,
+            gop_per_j=(model_flops / 1e9) / energy if energy else 0.0,
+            n_runs=n_runs, target=self.target)
+
     def save(self, build_dir: str) -> None:
         from repro.rtl.emit import write_artifacts
 
         write_artifacts(self.artifacts, build_dir)
+
+
+class RTLTarget:
+    """The ElasticAI-Creator codegen analogue as a registered target."""
+
+    name = "rtl"
+    default_hw = XC7S15
+    options_cls = RTLOptions
+    requires_stepper = True          # must lower the real model graph
+
+    def options_from_knobs(self, knobs) -> RTLOptions:
+        """Workflow knobs -> valid RTL Q-formats, clamped to the exactness
+        envelope (DESIGN.md §4): the DSP path caps weights at 12 bits and
+        LUT inputs at 9. This replaces the old per-Workflow ``fmt_builder``
+        hook. Knob dicts without ``bits`` get the target defaults."""
+        if "bits" not in knobs:
+            return RTLOptions()
+        bits = int(knobs["bits"])
+        frac = int(knobs.get("frac", max(1, bits - 2)))
+        wb = min(bits, 12)
+        ab = min(bits, 9)
+        return RTLOptions(
+            w_fmt=FxpFormat(wb, min(frac, wb - 1)),
+            act_fmt=FxpFormat(ab, min(max(0, frac - 2), ab - 1, 8)))
+
+    def translate(self, cfg, params, stepper,
+                  options: RTLOptions) -> Tuple[SynthesisReport,
+                                                RTLExecutable]:
+        if params is None:
+            params, _ = stepper.init()
+        # a clock-less HWSpec (a TPU) can't be the fabric target: fall back
+        hw = options.hw if (options.hw is not None
+                            and options.hw.clock_hz) else self.default_hw
+        return translate_rtl(cfg, params, hw=hw,
+                             model_flops=options.model_flops or 0.0,
+                             w_fmt=options.w_fmt, act_fmt=options.act_fmt,
+                             state_fmt=options.state_fmt,
+                             emulator_mode=options.emulator_mode)
+
+
+RTL_TARGET = RTLTarget()
 
 
 def translate_rtl(cfg: ModelConfig, params, *,
@@ -80,26 +187,8 @@ def translate_rtl(cfg: ModelConfig, params, *,
 
 def measure_rtl(exe: RTLExecutable, x: jax.Array, *, model: str,
                 model_flops: float, hw: Optional[HWSpec] = None,
-                n_runs: int = 1) -> MeasurementReport:
-    """Stage-3 for the RTL backend: run the emulator (the deployed-design
-    proxy), then read latency/power off the cycle-accurate schedule.
-
-    ``n_runs > 1`` re-executes the design that many times — after the first
-    call every repeat replays the same compiled program (the emulator's
-    program cache), which is what makes measurement loops cheap.
-    """
-    hw = hw or exe.hw
-    clock = hw.clock_hz or 100e6
-    rr = estimate(exe.graph, clock_hz=clock)
-    for _ in range(max(1, n_runs)):           # actually execute the design
-        out = exe(x)
-    jax.block_until_ready(out)
-    latency = rr.latency_s
-    energy = hw.energy_j(latency, duty=rr.duty)
-    return MeasurementReport(
-        model=model, platform=f"rtl-emulator({hw.name})",
-        latency_s=latency,
-        power_w=energy / latency if latency else 0.0,
-        energy_j=energy,
-        gop_per_j=(model_flops / 1e9) / energy if energy else 0.0,
-        n_runs=max(1, n_runs))
+                n_runs: int = DEFAULT_N_RUNS) -> MeasurementReport:
+    """Functional spelling of :meth:`RTLExecutable.measure` (kept for
+    direct use; the Workflow goes through the Deployment method)."""
+    return exe.measure((x,), model=model, model_flops=model_flops,
+                       hw=hw, n_runs=n_runs)

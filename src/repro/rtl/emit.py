@@ -4,7 +4,7 @@
 ``.mem`` initialization files (weights/biases/LUT tables as two's-complement
 hex, straight from ``fxp_to_int``) and a top-level ``<design>.vhd`` that
 wires the instances together — the "press the button" output of
-``Creator.translate(st, backend="rtl")``. A ``manifest.json`` records every
+``Creator.translate(st, target="rtl")``. A ``manifest.json`` records every
 edge's Q-format so the emulator, the Elastic Node loader, and the artifacts
 stay mutually consistent.
 """

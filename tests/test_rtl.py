@@ -21,9 +21,10 @@ from repro.model.layers import init_params
 from repro.model.lstm import lstm_flops, lstm_schema
 from repro.quant.fixedpoint import FxpFormat, fxp_requant_int, fxp_quantize
 from repro.rtl import (ActLUTNode, ElementwiseNode, Graph, Edge,
-                       RTLEmulator, assert_bit_exact, emit_graph, estimate,
-                       lower_linear_stack, lower_model, reference_apply,
-                       synthesize, validate_formats)
+                       RTLEmulator, RTLOptions, assert_bit_exact,
+                       emit_graph, estimate, lower_linear_stack,
+                       lower_model, reference_apply, synthesize,
+                       validate_formats)
 
 
 def _lstm_graph(n_layers: int = 1, **fmts):
@@ -42,10 +43,10 @@ def _lstm_graph(n_layers: int = 1, **fmts):
 
 
 def test_translate_rtl_emits_artifacts():
-    """The acceptance path: translate(backend="rtl") -> ≥3 template files."""
+    """The acceptance path: translate(target="rtl") -> ≥3 template files."""
     cr = Creator(hw=XC7S15)
     st_ = cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
-    syn, exe = cr.translate(st_, backend="rtl")
+    syn, exe = cr.translate(st_, target="rtl")
     assert syn.backend == "rtl"
     assert syn.n_artifacts >= 3
     assert len(exe.artifacts) >= 3
@@ -270,9 +271,10 @@ def test_per_step_legacy_path_matches_fused():
 def test_executable_run_many_and_mode_plumbing():
     cr = Creator(hw=XC7S15)
     st_ = cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
-    _, exe = cr.translate(st_, backend="rtl", emulator_mode="jnp")
+    _, exe = cr.translate(st_, target="rtl",
+                          options=RTLOptions(emulator_mode="jnp"))
     assert exe.emulator.mode == "jnp"
-    _, exe_f = cr.translate(st_, backend="rtl")
+    _, exe_f = cr.translate(st_, target="rtl")
     assert exe_f.emulator.mode == "fused"
     x = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 1))
     outs = exe_f.run_many([x, x])
@@ -329,7 +331,7 @@ def test_synthesis_report_tracks_table1():
 # --------------------------------------------------------------------------- #
 
 
-def test_workflow_roundtrip_backend_rtl():
+def test_workflow_roundtrip_target_rtl():
     from repro.core.report import DesignReport
     from repro.core.workflow import Requirement, Workflow
 
@@ -349,13 +351,14 @@ def test_workflow_roundtrip_backend_rtl():
     def stepper_builder(knobs):
         return Creator(hw=XC7S15).build(cfg, SHAPES_LSTM["infer_1"])
 
-    def fmt_builder(knobs):
+    def options_from_knobs(knobs):
         b = knobs["bits"]
-        return {"w_fmt": FxpFormat(b, b - 2), "act_fmt": FxpFormat(b, b - 4)}
+        return RTLOptions(w_fmt=FxpFormat(b, b - 2),
+                          act_fmt=FxpFormat(b, b - 4))
 
     wf = Workflow(creator=Creator(hw=XC7S15), train_fn=train_fn,
                   step_builder=step_builder, stepper_builder=stepper_builder,
-                  backend="rtl", fmt_builder=fmt_builder)
+                  target="rtl", options_from_knobs=options_from_knobs)
     hist = wf.run(Requirement(max_latency_s=1.0), lambda h: None,
                   {"bits": 8}, max_iters=2)
     assert len(hist) == 1 and hist[0].satisfied
@@ -363,6 +366,8 @@ def test_workflow_roundtrip_backend_rtl():
     assert rec.synthesis.backend == "rtl"
     assert rec.synthesis.n_artifacts >= 3
     assert rec.measurement.platform.startswith("rtl-emulator")
+    assert rec.measurement.target == "rtl"
+    assert rec.measurement.n_runs >= 1
     assert rec.measurement.latency_s > 0
     assert abs(rec.est_vs_meas["latency_rel_err"]) < 1e-9
     assert rec.measurement.gop_per_j > 1.0
@@ -371,7 +376,7 @@ def test_workflow_roundtrip_backend_rtl():
 def test_rtl_executable_save(tmp_path):
     cr = Creator(hw=XC7S15)
     st_ = cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
-    _, exe = cr.translate(st_, backend="rtl")
+    _, exe = cr.translate(st_, target="rtl")
     exe.save(str(tmp_path))
     files = list(tmp_path.iterdir())
     assert len(files) == len(exe.artifacts)

@@ -1,0 +1,230 @@
+"""Deployment-target API: registry, options validation, the uniform
+Deployment artifact, and the deprecation shims over the old backend= API."""
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.creator import Creator
+from repro.core.target import (DEFAULT_N_RUNS, Deployment, Target,
+                               TargetOptions, XLADeployment, XLAOptions,
+                               get_target, list_targets, register_target)
+from repro.core.types import SHAPES_LSTM
+from repro.energy.hw import XC7S15, get_hw
+from repro.quant.fixedpoint import FxpFormat
+from repro.rtl import RTLExecutable, RTLOptions
+
+
+def _creator_and_stepper():
+    cr = Creator(hw=XC7S15)
+    return cr, cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+
+
+def test_registry_lists_both_builtin_targets():
+    assert {"xla", "rtl"} <= set(list_targets())
+
+
+def test_unknown_target_error_names_registered():
+    with pytest.raises(ValueError, match=r"unknown target 'hls'") as ei:
+        get_target("hls")
+    # the error doubles as discovery: it must list what IS registered
+    assert "xla" in str(ei.value) and "rtl" in str(ei.value)
+
+
+def test_get_target_resolves_and_conforms_to_protocol():
+    for name in ("xla", "rtl"):
+        tgt = get_target(name)
+        assert isinstance(tgt, Target)
+        assert tgt.name == name
+        assert tgt.default_hw.name
+        assert issubclass(tgt.options_cls, TargetOptions)
+        opts = tgt.options_from_knobs({"bits": 8, "frac": 6})
+        assert isinstance(opts, tgt.options_cls)
+
+
+def test_get_target_passes_instances_through():
+    tgt = get_target("rtl")
+    assert get_target(tgt) is tgt
+
+
+def test_register_target_rejects_duplicates():
+    class Dupe:
+        name = "xla"
+        default_hw = XC7S15
+        options_cls = XLAOptions
+        requires_stepper = False
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_target(Dupe())
+
+
+def test_hw_by_name_round_trip():
+    assert get_hw("xc7s15") is XC7S15
+    with pytest.raises(KeyError, match="unknown HWSpec"):
+        get_hw("virtex-ultrascale")
+
+
+# --------------------------------------------------------------------------- #
+# Options dataclass validation
+# --------------------------------------------------------------------------- #
+
+
+def test_rtl_options_validate_emulator_mode():
+    with pytest.raises(ValueError, match="emulator_mode"):
+        RTLOptions(emulator_mode="simulated-annealing")
+
+
+def test_rtl_options_validate_format_types():
+    with pytest.raises(TypeError, match="w_fmt"):
+        RTLOptions(w_fmt=(8, 6))
+
+
+def test_xla_options_validate_kind():
+    with pytest.raises(ValueError, match="kind"):
+        XLAOptions(kind="synthesize")
+    assert XLAOptions(kind="prefill").kind == "prefill"
+
+
+def test_translate_rejects_mismatched_options():
+    cr, st = _creator_and_stepper()
+    with pytest.raises(TypeError, match="expects options"):
+        cr.translate(st, target="rtl", options=XLAOptions())
+
+
+def test_rtl_options_from_knobs_clamps_to_envelope():
+    """The knob hook owns the DSP/LUT bit-width clamps (ex-fmt_builder)."""
+    opts = get_target("rtl").options_from_knobs({"bits": 16, "frac": 12})
+    assert opts.w_fmt.total_bits <= 12
+    assert opts.act_fmt.total_bits <= 9
+    assert opts.w_fmt.frac_bits < opts.w_fmt.total_bits
+
+
+# --------------------------------------------------------------------------- #
+# The uniform Deployment artifact
+# --------------------------------------------------------------------------- #
+
+
+def test_rtl_deployment_contract_and_save_round_trip(tmp_path):
+    cr, st = _creator_and_stepper()
+    syn, dep = cr.translate(st, target="rtl",
+                            options=RTLOptions(w_fmt=FxpFormat(8, 6)))
+    assert isinstance(dep, Deployment) and isinstance(dep, RTLExecutable)
+    assert dep.target == "rtl"
+    assert dep.cycles > 0
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 1))
+    y = dep(x)                                   # callable on inputs
+    assert np.asarray(y).shape[0] == 2
+    # artifact round-trip: every emitted file lands on disk byte-identical
+    dep.save(str(tmp_path))
+    on_disk = {p.name: p.read_text() for p in tmp_path.iterdir()}
+    assert on_disk == dep.artifacts
+    man = json.loads(on_disk["manifest.json"])
+    assert man["total_macs"] > 0
+    # measure: unified default, target + n_runs recorded
+    m = dep.measure((x,), model="elastic-lstm", model_flops=21666.0)
+    assert m.target == "rtl" and m.n_runs == DEFAULT_N_RUNS
+    assert m.latency_s == pytest.approx(dep.cycles / XC7S15.clock_hz)
+
+
+def test_measure_defaults_unified_across_targets():
+    cr, st = _creator_and_stepper()
+    _, dep = cr.translate(st, target="rtl")
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 1))
+    m_rtl = dep.measure((x,), model="m", model_flops=1e4)
+
+    xd = XLADeployment(fn=jax.jit(lambda a: a * 2), hw=XC7S15)
+    m_xla = xd.measure((x,), model="m", model_flops=1e4)
+    assert m_rtl.n_runs == m_xla.n_runs == DEFAULT_N_RUNS
+    assert (m_rtl.target, m_xla.target) == ("rtl", "xla")
+
+
+def test_xla_deployment_bind_step_keeps_metadata():
+    xd = XLADeployment(fn=None, hw=XC7S15, hlo_text="HLO", cost={"flops": 1})
+    bound = xd.bind_step(jax.jit(lambda a: a + 1))
+    assert bound.hlo_text == "HLO" and bound.cost == {"flops": 1}
+    assert float(bound(jax.numpy.zeros(()))) == 1.0
+
+
+def test_rtl_deployment_ignores_bind_step():
+    cr, st = _creator_and_stepper()
+    _, dep = cr.translate(st, target="rtl")
+    assert dep.bind_step(lambda *a: None) is dep
+
+
+# --------------------------------------------------------------------------- #
+# Deprecation shims (the old surface keeps working, loudly)
+# --------------------------------------------------------------------------- #
+
+
+def test_translate_backend_kwarg_warns_and_forwards():
+    cr, st = _creator_and_stepper()
+    with pytest.warns(DeprecationWarning, match="backend"):
+        syn, exe = cr.translate(st, backend="rtl", w_fmt=FxpFormat(8, 6),
+                                emulator_mode="jnp")
+    assert syn.backend == "rtl"
+    assert exe.emulator.mode == "jnp"
+    # and the shimmed artifact is bit-for-bit the new-path artifact
+    syn2, exe2 = cr.translate(st, target="rtl",
+                              options=RTLOptions(w_fmt=FxpFormat(8, 6),
+                                                 emulator_mode="jnp"))
+    assert exe.artifacts == exe2.artifacts
+
+
+def test_translate_rejects_mixed_options_and_legacy_kwargs():
+    """Mixing the new options= with loose legacy Q-format kwargs must be
+    loud — the shim would otherwise rebuild options from defaults."""
+    cr, st = _creator_and_stepper()
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="not both"):
+            cr.translate(st, backend="rtl",
+                         options=RTLOptions(emulator_mode="jnp"),
+                         w_fmt=FxpFormat(8, 6))
+
+
+def test_measure_rtl_warns_and_matches_deployment_measure():
+    cr, st = _creator_and_stepper()
+    _, exe = cr.translate(st, target="rtl")
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 1))
+    with pytest.warns(DeprecationWarning, match="measure_rtl"):
+        old = cr.measure_rtl(exe, x, model="m", model_flops=1e4, n_runs=2)
+    new = exe.measure((x,), model="m", model_flops=1e4, n_runs=2)
+    assert old.latency_s == new.latency_s
+    assert old.energy_j == new.energy_j
+    assert old.target == new.target == "rtl"
+
+
+def test_workflow_backend_and_fmt_builder_warn():
+    from repro.core.workflow import Workflow
+
+    with pytest.warns(DeprecationWarning, match="backend"):
+        wf = Workflow(creator=Creator(), train_fn=None, step_builder=None,
+                      backend="rtl")
+    assert wf.target == "rtl"
+    with pytest.warns(DeprecationWarning, match="fmt_builder"):
+        wf2 = Workflow(creator=Creator(), train_fn=None, step_builder=None,
+                       target="rtl",
+                       fmt_builder=lambda k: {"w_fmt": FxpFormat(8, 6)})
+    opts = wf2.options_from_knobs({"bits": 8})
+    assert isinstance(opts, RTLOptions)
+    assert opts.w_fmt == FxpFormat(8, 6)
+
+
+def test_workflow_fmt_builder_ignored_off_rtl_like_before():
+    """Legacy Workflows could pass fmt_builder with the default (xla)
+    backend; it was only consumed by the RTL fork. The shim must keep
+    ignoring it rather than forcing RTLOptions onto the xla target."""
+    from repro.core.workflow import Workflow
+
+    with pytest.warns(DeprecationWarning, match="fmt_builder"):
+        wf = Workflow(creator=Creator(), train_fn=None, step_builder=None,
+                      fmt_builder=lambda k: {"w_fmt": FxpFormat(8, 6)})
+    assert wf.target == "xla"
+    assert wf.options_from_knobs is None        # target's own hook applies

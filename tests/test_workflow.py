@@ -94,3 +94,42 @@ def test_lstm_flops_matches_paper_scale():
     """Table I implies ~21.7 kOP/inference; our counted graph must agree."""
     flops = lstm_flops(get_config("elastic-lstm"))
     assert 15_000 < flops < 30_000, flops
+
+
+@pytest.mark.parametrize("target", ["xla", "rtl"])
+def test_workflow_single_path_over_targets(target):
+    """Both deployment targets execute the same run_once (no backend fork);
+    every MeasurementReport records the unified n_runs and target name."""
+    from repro.core.target import DEFAULT_N_RUNS
+    from repro.core.types import SHAPES_LSTM
+    from repro.energy.hw import XC7S15
+    from repro.model.lstm import lstm_apply
+
+    cfg = get_config("elastic-lstm")
+    assert not hasattr(Workflow, "_run_once_rtl"), \
+        "the RTL fork must be gone: one run_once for every target"
+
+    def train(knobs):
+        params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+        rep = DesignReport(model="elastic-lstm", train_loss=0.0,
+                           eval_loss=0.0)
+        return params, rep, None
+
+    def steps(knobs, params):
+        x = jnp.asarray(traffic_flow_batch(TrafficConfig(batch=1), 0)["x"])
+        fn = lambda p, xx: lstm_apply(p, xx, cfg)[0]
+        return fn, (params, x), float(lstm_flops(cfg))
+
+    creator = Creator(hw=XC7S15) if target == "rtl" else Creator()
+    wf = Workflow(creator=creator, train_fn=train, step_builder=steps,
+                  stepper_builder=(
+                      (lambda k: creator.build(cfg, SHAPES_LSTM["infer_1"]))
+                      if target == "rtl" else None),
+                  target=target)
+    rec = wf.run_once({"bits": 8, "frac": 6})
+    assert rec.measurement.target == target
+    assert rec.measurement.n_runs == DEFAULT_N_RUNS
+    assert rec.measurement.latency_s > 0
+    # satellite: _synth_from_fn threads the real model name (no more "wf")
+    assert rec.synthesis.model == "elastic-lstm"
+    assert "latency_rel_err" in rec.est_vs_meas
