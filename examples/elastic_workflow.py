@@ -1,19 +1,23 @@
-"""The paper's demo, as a script: the full ElasticAI-Workflow on the
-traffic-flow LSTM — design/QAT-train -> translate+estimate -> deploy+measure,
-with the feedback loop widening the fixed-point format until the requirement
-is met (what the PerCom audience would do interactively).
+"""The paper's demo, as a script: the full ElasticAI-Workflow on an edge
+workload — design/train -> translate+estimate -> deploy+measure, with the
+feedback loop widening the fixed-point format until the requirement is met
+(what the PerCom audience would do interactively).
 
     PYTHONPATH=src python examples/elastic_workflow.py               # XLA loop
     PYTHONPATH=src python examples/elastic_workflow.py --target rtl
+    PYTHONPATH=src python examples/elastic_workflow.py --target rtl --arch conv1d
 
-With ``--target rtl`` the loop's stage 2/3 run against the *generated
-accelerator*: template artifacts are emitted and the bit-exact emulator's
-cycle schedule provides the measurement. Both targets drive the same
-``Workflow.run_once`` — the target registry resolves the substrate, and the
-RTL target's own ``options_from_knobs`` clamps the knobs to the exactness
-envelope (no per-script format plumbing needed). Either way, the script
-finishes by "pressing the button" — translating the final design to RTL
-artifacts through the registry.
+``--arch`` picks the workload: the paper's traffic-flow LSTM (QAT-trained)
+or the TCN-style depthwise conv1d sensor stack — both lower through the same
+hardware-template registry (DESIGN.md §9). With ``--target rtl`` the loop's
+stage 2/3 run against the *generated accelerator*: template artifacts are
+emitted and the bit-exact emulator's cycle schedule provides the
+measurement. Both targets drive the same ``Workflow.run_once`` — the target
+registry resolves the substrate, and the RTL target's own
+``options_from_knobs`` clamps the knobs to the exactness envelope (no
+per-script format plumbing needed). Either way, the script finishes by
+"pressing the button" — translating the final design to RTL artifacts
+through the registry (written to ``--build-dir`` when given).
 """
 import jax
 import jax.numpy as jnp
@@ -23,7 +27,8 @@ from repro.core.creator import Creator
 from repro.core.report import DesignReport
 from repro.core.target import get_target, list_targets
 from repro.core.workflow import Requirement, Workflow
-from repro.data.pipeline import TrafficConfig, traffic_flow_batch
+from repro.data.pipeline import (SensorConfig, TrafficConfig,
+                                 sensor_window_batch, traffic_flow_batch)
 from repro.model.layers import init_params
 from repro.model.lstm import lstm_flops, lstm_schema
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
@@ -32,8 +37,10 @@ from repro.quant.qat import QATConfig, make_qat_loss, make_qat_lstm_apply
 
 TRAIN_STEPS = 120
 
+ARCH_ALIASES = {"lstm": "elastic-lstm", "conv1d": "elastic-conv1d"}
 
-def train_fn(knobs):
+
+def lstm_train_fn(knobs):
     cfg = get_config("elastic-lstm")
     qcfg = QATConfig(weight_fmt=FxpFormat(knobs["bits"], knobs["frac"]),
                      act_fmt=FxpFormat(knobs["bits"],
@@ -66,7 +73,7 @@ def train_fn(knobs):
     return params, rep, apply
 
 
-def step_builder(knobs, params):
+def lstm_step_builder(knobs, params):
     cfg = get_config("elastic-lstm")
     qcfg = QATConfig(weight_fmt=FxpFormat(knobs["bits"], knobs["frac"]),
                      act_fmt=FxpFormat(knobs["bits"],
@@ -74,6 +81,70 @@ def step_builder(knobs, params):
     apply = make_qat_lstm_apply(cfg, qcfg)
     x = jnp.asarray(traffic_flow_batch(TrafficConfig(batch=1), 0)["x"])
     return (lambda p, xx: apply(p, xx)[0]), (params, x), float(lstm_flops(cfg))
+
+
+def conv1d_train_fn(knobs):
+    """Stage 1 for the sensor stack: the hard activations are already in
+    the float graph, so QAT is just fake-quantizing the weights to the
+    knobs' format (straight-through) — widening the knobs genuinely moves
+    the reported eval loss, which is what the feedback loop reads."""
+    from repro.model.conv1d import conv1d_apply, conv1d_schema
+    from repro.quant.qat import fake_quant_tree
+
+    cfg = get_config("elastic-conv1d")
+    c = cfg.conv1d
+    wfmt = FxpFormat(knobs["bits"], knobs["frac"])
+    params = init_params(conv1d_schema(cfg), jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=150,
+                       weight_decay=0.0)
+    scfg = SensorConfig(seq_len=c.seq_len, channels=c.channels, batch=256)
+    batch = {k: jnp.asarray(v) for k, v in
+             sensor_window_batch(scfg, 0).items()}
+
+    def loss_fn(p):
+        pred, _ = conv1d_apply(fake_quant_tree(p, wfmt), batch["x"], cfg)
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p2, o2, _ = adamw_update(g, o, p, ocfg)
+        return p2, o2, loss
+
+    for i in range(TRAIN_STEPS):
+        params, opt, loss = step(params, opt)
+    ev = sensor_window_batch(SensorConfig(seq_len=c.seq_len,
+                                          channels=c.channels,
+                                          batch=256, seed=9), 1)
+    pred, _ = conv1d_apply(fake_quant_tree(params, wfmt),
+                           jnp.asarray(ev["x"]), cfg)
+    eval_loss = float(jnp.mean((pred - jnp.asarray(ev["y"])) ** 2))
+    rep = DesignReport(model="elastic-conv1d", train_loss=float(loss),
+                       eval_loss=eval_loss,
+                       params=sum(x.size for x in jax.tree.leaves(params)),
+                       weight_fmt=str(wfmt), act_fmt=str(
+                           FxpFormat(knobs["bits"],
+                                     max(0, knobs["frac"] - 2))))
+    return params, rep, None
+
+
+def conv1d_step_builder(knobs, params):
+    from repro.model.conv1d import conv1d_apply, conv1d_flops
+
+    cfg = get_config("elastic-conv1d")
+    c = cfg.conv1d
+    x = jnp.asarray(sensor_window_batch(
+        SensorConfig(seq_len=c.seq_len, channels=c.channels, batch=1),
+        0)["x"])
+    return ((lambda p, xx: conv1d_apply(p, xx, cfg)[0]), (params, x),
+            float(conv1d_flops(cfg)))
+
+
+BUILDERS = {
+    "elastic-lstm": (lstm_train_fn, lstm_step_builder),
+    "elastic-conv1d": (conv1d_train_fn, conv1d_step_builder),
+}
 
 
 def optimizer(history):
@@ -98,21 +169,33 @@ def main():
                     choices=sorted(list_targets()), default="xla",
                     help="registered deployment target (--backend is the "
                          "legacy spelling)")
+    ap.add_argument("--arch", default="lstm",
+                    choices=sorted(set(ARCH_ALIASES) | set(BUILDERS)),
+                    help="workload: the paper's LSTM or the conv1d sensor "
+                         "stack (short or full arch id)")
     ap.add_argument("--max-iters", type=int, default=4,
                     help="feedback-loop budget (CI smoke uses 1)")
     ap.add_argument("--train-steps", type=int, default=TRAIN_STEPS,
                     help="stage-1 training steps per iteration")
+    ap.add_argument("--build-dir", default=None,
+                    help="write the final RTL artifact bundle here "
+                         "(<build-dir>/<arch>/)")
     args = ap.parse_args()
     target = args.target
+    arch = ARCH_ALIASES.get(args.arch, args.arch)
     TRAIN_STEPS = args.train_steps
-    from repro.core.types import SHAPES_LSTM
+    from repro.core.types import shapes_for
     from repro.energy.hw import XC7S15
 
-    cfg = get_config("elastic-lstm")
+    cfg = get_config(arch)
+    infer_shape = shapes_for(cfg)[0]             # "infer_1" for both archs
     creator = Creator(hw=XC7S15) if target == "rtl" else Creator()
+    train_fn, step_builder = BUILDERS[arch]
 
     def stepper_builder(knobs):
-        return creator.build(cfg, SHAPES_LSTM["infer_1"])
+        from repro.core.types import shape_table_for
+
+        return creator.build(cfg, shape_table_for(cfg)[infer_shape])
 
     wf = Workflow(creator=creator, train_fn=train_fn,
                   step_builder=step_builder, target=target,
@@ -139,17 +222,23 @@ def main():
     params, _, _ = train_fn(best)
     rtl = get_target("rtl")
     creator_rtl = Creator(hw=XC7S15)
-    st = creator_rtl.build(cfg, SHAPES_LSTM["infer_1"])
+    st = stepper_builder(best)
     syn, dep = creator_rtl.translate(
         st, target="rtl", params=params,
         options=rtl.options_from_knobs(best))
-    print(f"\nRTL translate: {syn.n_artifacts} artifacts, "
+    print(f"\nRTL translate [{arch}]: {syn.n_artifacts} artifacts, "
           f"{syn.resources['cycles']} cycles "
           f"({syn.est_latency_s*1e6:.2f} us @ 100 MHz), "
           f"dsp={syn.resources['dsp']} bram36={syn.resources['bram36']} "
           f"lut={syn.resources['lut']}, fits={syn.fits}")
     for name in sorted(dep.artifacts):
         print(f"  - {name}")
+    if args.build_dir:
+        import os
+
+        out = os.path.join(args.build_dir, arch)
+        dep.save(out)
+        print(f"artifact bundle written to {out}/")
 
 
 if __name__ == "__main__":

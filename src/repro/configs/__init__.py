@@ -23,9 +23,11 @@ _ARCH_MODULES = {
     "zamba2-7b": "zamba2_7b",
     "rwkv6-7b": "rwkv6_7b",
     "elastic-lstm": "elastic_lstm",
+    "elastic-conv1d": "elastic_conv1d",
 }
 
-ARCH_IDS = tuple(k for k in _ARCH_MODULES if k != "elastic-lstm")
+_PAPER_IDS = ("elastic-lstm", "elastic-conv1d")
+ARCH_IDS = tuple(k for k in _ARCH_MODULES if k not in _PAPER_IDS)
 ALL_IDS = tuple(_ARCH_MODULES)
 
 

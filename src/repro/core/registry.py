@@ -77,6 +77,10 @@ register(Component(
     quantized="repro.quant.qat.make_qat_lstm_apply",
     notes="the paper's own accelerator (Table I)"))
 register(Component(
+    "conv1d", ref="repro.model.conv1d.conv1d_apply",
+    template="repro.rtl.oplib",
+    notes="TCN-style depthwise sensor stack (rtl 'conv1d' hw template)"))
+register(Component(
     "mlp", ref="repro.model.layers.apply_mlp",
     quantized="repro.kernels.quant_matmul.ops"))
 
@@ -86,8 +90,8 @@ def validate_config(cfg: ModelConfig) -> Dict[str, Component]:
     from repro.model.transformer import group_structure
 
     used = {}
-    if cfg.family == "lstm":
-        used["lstm"] = get("lstm")
+    if cfg.family in ("lstm", "conv1d"):
+        used[cfg.family] = get(cfg.family)
         return used
     for kind, _ in group_structure(cfg):
         used[kind] = get(kind)

@@ -23,6 +23,11 @@ lazy entry so ``repro.rtl`` only imports when first requested. Adding a new
 backend (multi-device XLA, a per-FPGA-part RTL variant, ...) means writing
 one Target class and registering it — ``Creator`` and ``Workflow`` never
 change again.
+
+The RTL target applies the same pattern one level down: inside it, each
+*layer kind* is a registered hardware template (``repro.rtl.oplib``,
+DESIGN.md §9), and its options dataclass (``RTLOptions``) carries per-kind
+knobs such as ``w_fmt_overrides`` validated against that registry.
 """
 from __future__ import annotations
 

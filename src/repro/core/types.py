@@ -75,11 +75,49 @@ class LSTMConfig:
     seq_len: int = 6
 
 
+@dataclass(frozen=True)
+class Conv1dConfig:
+    """TCN-style depthwise conv stack for multichannel sensor windows.
+
+    The paper's pervasive-computing setting beyond the LSTM: ``n_blocks``
+    depthwise, strided 1-D conv blocks (one ``kernel``-tap filter per
+    channel) with a hard activation between, then a dense readout over the
+    flattened final feature map.
+    """
+
+    channels: int = 3              # sensor channels (e.g. 3-axis IMU)
+    seq_len: int = 16              # window length in samples
+    kernel: int = 3                # taps per channel filter
+    stride: int = 2
+    n_blocks: int = 2
+    out_features: int = 1
+    act: str = "hard_tanh"
+
+    def block_lens(self) -> Tuple[int, ...]:
+        """Per-block output lengths: t' = (t - kernel)//stride + 1."""
+        lens, t = [], self.seq_len
+        for _ in range(self.n_blocks):
+            t = (t - self.kernel) // self.stride + 1
+            if t < 1:
+                raise ValueError(
+                    f"conv1d window collapses: seq_len={self.seq_len} "
+                    f"kernel={self.kernel} stride={self.stride} "
+                    f"n_blocks={self.n_blocks}")
+            lens.append(t)
+        return tuple(lens)
+
+    @property
+    def flat_features(self) -> int:
+        """Input width of the dense head (last block length × channels)."""
+        return self.block_lens()[-1] * self.channels
+
+
 # ---------------------------------------------------------------------------
 # Model config
 # ---------------------------------------------------------------------------
 
-FAMILIES = ("dense", "moe", "audio", "vlm", "hybrid", "ssm", "lstm")
+FAMILIES = ("dense", "moe", "audio", "vlm", "hybrid", "ssm", "lstm",
+            "conv1d")
 BLOCK_KINDS = ("attn", "moe", "mamba2", "rwkv6", "shared_attn")
 
 
@@ -103,6 +141,7 @@ class ModelConfig:
     rwkv: Optional[RWKVConfig] = None
     encoder: Optional[EncoderConfig] = None
     lstm: Optional[LSTMConfig] = None
+    conv1d: Optional[Conv1dConfig] = None
     frontend: Optional[str] = None          # "audio" | "vision" (stub embeddings)
     n_frontend_tokens: int = 0              # visual/audio tokens prepended/encoded
     frontend_dim: int = 0                   # raw embedding dim from the stub
@@ -136,7 +175,7 @@ class ModelConfig:
 
     def block_kinds(self) -> Tuple[str, ...]:
         """Per-layer block kind sequence (length n_layers)."""
-        if self.family == "lstm":
+        if self.family in ("lstm", "conv1d"):
             return ()
         if self.family == "ssm":
             return ("rwkv6",) * self.n_layers
@@ -217,11 +256,28 @@ SHAPES_LSTM = {
     "train_batch": ShapeConfig("train_batch", "train", 6, 64),
 }
 
+# TCN-style sensor workload: one conv1d inference (multichannel window).
+SHAPES_CONV1D = {
+    "infer_1": ShapeConfig("infer_1", "prefill", 16, 1),
+    "train_batch": ShapeConfig("train_batch", "train", 16, 64),
+}
+
+
+def shape_table_for(cfg: ModelConfig) -> dict:
+    """The {name: ShapeConfig} table this arch family draws from — the one
+    place the family→table mapping lives (dryrun/examples look shapes up
+    here instead of re-spelling the family switch)."""
+    if cfg.family == "lstm":
+        return SHAPES_LSTM
+    if cfg.family == "conv1d":
+        return SHAPES_CONV1D
+    return SHAPES
+
 
 def shapes_for(cfg: ModelConfig) -> Tuple[str, ...]:
     """Which assigned shapes run for this arch (skips documented in DESIGN.md)."""
-    if cfg.family == "lstm":
-        return tuple(SHAPES_LSTM)
+    if cfg.family in ("lstm", "conv1d"):
+        return tuple(shape_table_for(cfg))
     names = ["train_4k", "prefill_32k", "decode_32k"]
     if cfg.family in ("ssm", "hybrid"):  # sub-quadratic: run long_500k
         names.append("long_500k")
@@ -229,7 +285,7 @@ def shapes_for(cfg: ModelConfig) -> Tuple[str, ...]:
 
 
 def skipped_shapes_for(cfg: ModelConfig) -> Tuple[str, ...]:
-    if cfg.family in ("ssm", "hybrid", "lstm"):
+    if cfg.family in ("ssm", "hybrid", "lstm", "conv1d"):
         return ()
     return ("long_500k",)
 

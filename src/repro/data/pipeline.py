@@ -100,6 +100,45 @@ def traffic_flow_batch(cfg: TrafficConfig, step: int) -> Dict[str, np.ndarray]:
 
 
 # ---------------------------------------------------------------------------
+# Multichannel sensor windows (the conv1d workload)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SensorConfig:
+    """IMU-style synthetic stream: per-channel harmonics + bursts + noise."""
+
+    seq_len: int = 16
+    channels: int = 3
+    batch: int = 64
+    seed: int = 0
+    noise: float = 0.05
+
+
+def sensor_window_batch(cfg: SensorConfig, step: int) -> Dict[str, np.ndarray]:
+    """Pure function of (cfg.seed, step) — restart-exact, like the others.
+
+    The target is the window's mean motion intensity (channel-weighted mean
+    of |x| over the last half of the window) — a burst-detection style
+    regression a depthwise TCN can learn from local tap patterns.
+    """
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step, 7]))
+    B, S, C = cfg.batch, cfg.seq_len, cfg.channels
+    starts = rng.integers(0, 10_000, size=(B, 1, 1))
+    t = starts + np.arange(S)[None, :, None]
+    ch = np.arange(C)[None, None, :]
+    phase = 2 * np.pi * t / (12.0 + 3.0 * ch)
+    burst = (rng.random((B, 1, C)) < 0.3).astype(np.float32)
+    x = (0.5 * np.sin(phase)
+         + 0.25 * np.sin(2.1 * phase + ch)
+         + 0.4 * burst * np.sin(5.0 * phase)
+         + cfg.noise * rng.standard_normal((B, S, C)))
+    w_ch = np.linspace(1.0, 0.5, C)[None, None, :]
+    y = (np.abs(x[:, S // 2:, :]) * w_ch).mean(axis=(1, 2), keepdims=False)
+    return {"x": x.astype(np.float32), "y": y[:, None].astype(np.float32)}
+
+
+# ---------------------------------------------------------------------------
 # Prefetch
 # ---------------------------------------------------------------------------
 

@@ -32,8 +32,8 @@ from repro.configs import ALL_IDS, ARCH_IDS, get_config
 # import it without this module's XLA_FLAGS side effect); re-exported here
 # for callers that learned the old address.
 from repro.core.target import model_flops_estimate  # noqa: F401
-from repro.core.types import (SHAPES, SHAPES_LSTM, MeshConfig,
-                              ParallelismConfig, shapes_for)
+from repro.core.types import (MeshConfig, ParallelismConfig,
+                              shape_table_for, shapes_for)
 from repro.energy.roofline import HEADER, RooflineReport, roofline
 from repro.launch.mesh import make_production_mesh, mesh_config
 from repro.model.lm import Stepper
@@ -53,16 +53,19 @@ def _compile_cell(cfg, shape, mcfg, mesh, par):
     batch_sh = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
     abstract = st.abstract_inputs()
 
-    if cfg.family == "lstm" and shape.kind != "train":
-        # the paper's serving workload: plain forward inference
-        from repro.model.lstm import lstm_apply
+    if cfg.family in ("lstm", "conv1d") and shape.kind != "train":
+        # the paper's serving workloads: plain forward inference
+        if cfg.family == "lstm":
+            from repro.model.lstm import lstm_apply as window_apply
+        else:
+            from repro.model.conv1d import conv1d_apply as window_apply
 
         with mesh:
             ab = dict(abstract["batch"])
             ab.pop("y", None)
             bsh = dict(batch_sh)
             bsh.pop("y", None)
-            fn = jax.jit(lambda p, b: lstm_apply(p, b["x"], cfg)[0],
+            fn = jax.jit(lambda p, b: window_apply(p, b["x"], cfg)[0],
                          in_shardings=(param_sh, bsh))
             lowered = fn.lower(abstract["params"], ab)
             compiled = lowered.compile()
@@ -110,7 +113,7 @@ def extrapolation_plan(cfg):
     EXPERIMENTS.md §Dry-run.
     """
     T = cfg.n_layers
-    if cfg.family == "lstm":
+    if cfg.family in ("lstm", "conv1d"):
         return [(T, 1.0)]
     if cfg.family == "hybrid" and cfg.shared_attn_every:
         # zamba2 unit structure: f(T) = a + n_units·c_unit + rem·b_layer.
@@ -145,14 +148,13 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     cfg = get_config(arch)
     if cfg_transform is not None:
         cfg = cfg_transform(cfg)
-    shapes = SHAPES_LSTM if cfg.family == "lstm" else SHAPES
-    shape = shapes[shape_name]
+    shape = shape_table_for(cfg)[shape_name]
     mcfg = mesh_config(multi_pod=multi_pod)
     mesh = make_production_mesh(multi_pod=multi_pod)
     par = par or ParallelismConfig()
     mesh_name = "2x16x16" if multi_pod else "16x16"
 
-    if mode == "unroll" or cfg.family == "lstm":
+    if mode == "unroll" or cfg.family in ("lstm", "conv1d"):
         cost, mem, hlo, dt = _compile_cell(cfg, shape, mcfg, mesh, par)
         rep = roofline(
             arch=arch, shape=shape_name, mesh=mesh_name, n_devices=mesh.size,

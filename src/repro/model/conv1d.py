@@ -1,0 +1,84 @@
+"""TCN-style depthwise conv1d stack — the sensor workload beyond the LSTM.
+
+The paper's pervasive-computing setting includes wearable/IoT sensor
+pipelines; this is the minimal translatable model for them: ``n_blocks``
+depthwise, strided 1-D convolutions (one ``kernel``-tap filter per channel,
+exactly what one BRAM + one DSP slice per template instance computes) with a
+hard activation between, then a dense readout over the flattened final
+feature map.
+
+The block is written so the generated RTL template (``repro.rtl.oplib``
+``conv1d`` kind) matches it structurally: the same tap loop, the same hard
+activation the ROM implements, the same flatten-then-dense head. Uses the
+FPGA-friendly ``hard_tanh``/``hard_sigmoid`` activations directly, so what
+Stage 1 trains is what the fixed-point lowering quantizes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import ModelConfig
+from repro.model.layers import PSpec
+from repro.quant.qat import hard_sigmoid, hard_tanh
+
+
+def conv1d_schema(cfg: ModelConfig, tp: int = 0):
+    c = cfg.conv1d
+    blocks = [{
+        "w": PSpec((c.kernel, c.channels), P(), dtype=jnp.float32),
+        "b": PSpec((c.channels,), P(), dtype=jnp.float32, init="zeros"),
+    } for _ in range(c.n_blocks)]
+    return {
+        "blocks": blocks,
+        "head_w": PSpec((c.flat_features, c.out_features), P(),
+                        dtype=jnp.float32),
+        "head_b": PSpec((c.out_features,), P(), dtype=jnp.float32,
+                        init="zeros"),
+    }
+
+
+def conv1d_frames(x: jax.Array, kernel: int, stride: int) -> jax.Array:
+    """(B, S, C) -> (B, T, K, C) strided tap windows, T=(S-K)//stride+1.
+
+    THE framing of the conv1d vertical: the float model below and the RTL
+    template's emulator/oracle (``repro.rtl.oplib.Conv1dTemplate``) both go
+    through this helper, so "what QAT trains" and "what the lowering
+    quantizes" cannot drift apart.
+    """
+    t_out = (x.shape[1] - kernel) // stride + 1
+    return jnp.stack([x[:, t * stride: t * stride + kernel]
+                      for t in range(t_out)], axis=1)
+
+
+def depthwise_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                     stride: int) -> jax.Array:
+    """x (B, S, C) ⊛ w (K, C) + b (C,), per-channel taps, stride ≥ 1."""
+    frames = conv1d_frames(x, int(w.shape[0]), stride)    # (B, T, K, C)
+    return jnp.einsum("btkc,kc->btc", frames, w) + b
+
+
+def conv1d_apply(p, x: jax.Array, cfg: ModelConfig,
+                 state=None) -> Tuple[jax.Array, Tuple]:
+    """Runs the conv stack over the window; returns (pred (B, out), ())."""
+    c = cfg.conv1d
+    act = hard_tanh if c.act == "hard_tanh" else hard_sigmoid
+    h = x
+    for blk in p["blocks"]:
+        h = act(depthwise_conv1d(h, blk["w"], blk["b"], c.stride))
+    B = h.shape[0]
+    pred = h.reshape(B, -1) @ p["head_w"] + p["head_b"]
+    return pred, ()
+
+
+def conv1d_flops(cfg: ModelConfig) -> int:
+    """MAC-counted ops per single inference (OP = MAC*2, paper convention)."""
+    c = cfg.conv1d
+    total = 0
+    for t in c.block_lens():
+        total += 2 * t * c.kernel * c.channels + t * c.channels  # taps + act
+    total += 2 * c.flat_features * c.out_features
+    return total

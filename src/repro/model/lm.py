@@ -88,15 +88,18 @@ def _mk_ctx(cfg, mesh_cfg, mode, mesh, par, attn_impl=None):
 
 def make_loss_fn(cfg: ModelConfig, mesh_cfg: MeshConfig,
                  par: ParallelismConfig, mesh: Optional[Mesh]):
-    if cfg.family == "lstm":
-        from repro.model.lstm import lstm_apply
+    if cfg.family in ("lstm", "conv1d"):
+        if cfg.family == "lstm":
+            from repro.model.lstm import lstm_apply as apply_fn
+        else:
+            from repro.model.conv1d import conv1d_apply as apply_fn
 
-        def lstm_loss(params, batch):
-            pred, _ = lstm_apply(params, batch["x"], cfg)
+        def window_loss(params, batch):
+            pred, _ = apply_fn(params, batch["x"], cfg)
             loss = jnp.mean(jnp.square(pred - batch["y"]))
             return loss, {"loss": loss}
 
-        return lstm_loss
+        return window_loss
 
     def loss_fn(params, batch):
         ctx = _mk_ctx(cfg, mesh_cfg, "train", mesh, par)
@@ -189,7 +192,7 @@ def _batch_axis(mesh_cfg: MeshConfig, batch: int) -> Optional[Tuple[str, ...]]:
 def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig,
                  mesh_cfg: MeshConfig) -> Dict[str, P]:
     ba = _batch_axis(mesh_cfg, shape.global_batch)
-    if cfg.family == "lstm":
+    if cfg.family in ("lstm", "conv1d"):
         return {"x": P(ba, None, None), "y": P(ba, None)}
     specs: Dict[str, P] = {"tokens": P(ba, None)}
     if shape.kind == "train":
@@ -208,6 +211,11 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtyp
     if cfg.family == "lstm":
         c = cfg.lstm
         return {"x": jax.ShapeDtypeStruct((B, c.seq_len, c.in_features),
+                                          jnp.float32),
+                "y": jax.ShapeDtypeStruct((B, c.out_features), jnp.float32)}
+    if cfg.family == "conv1d":
+        c = cfg.conv1d
+        return {"x": jax.ShapeDtypeStruct((B, c.seq_len, c.channels),
                                           jnp.float32),
                 "y": jax.ShapeDtypeStruct((B, c.out_features), jnp.float32)}
     sds: Dict[str, jax.ShapeDtypeStruct] = {}

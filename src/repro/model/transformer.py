@@ -133,6 +133,10 @@ def param_schema(cfg: ModelConfig, tp: int = 16):
         from repro.model.lstm import lstm_schema
 
         return lstm_schema(cfg)
+    if cfg.family == "conv1d":
+        from repro.model.conv1d import conv1d_schema
+
+        return conv1d_schema(cfg)
     sch: Dict[str, Any] = {"embed": embed_schema(cfg, tp)}
     for gi, (kind, count) in enumerate(group_structure(cfg)):
         sch[f"g{gi}"] = _stack(count, block_schema(cfg, kind, tp))

@@ -1,9 +1,14 @@
-"""RTL backend — the ElasticAI-Creator codegen analogue (DESIGN.md §3).
+"""RTL backend — the ElasticAI-Creator codegen analogue (DESIGN.md §3, §9).
 
 Pipeline:  quantized model ──lower──▶ fixed-point dataflow IR (``ir``)
            ──instantiate──▶ VHDL-like template artifacts (``templates``,
            ``emit``) ──verify──▶ bit-exact int32 emulator (``emulator``)
            ──cost──▶ XC7S15 resource/cycle model (``resources``).
+
+Every stage is a registry-dispatched walk over the hardware-template (op)
+library (``oplib``): one :class:`~repro.rtl.oplib.HWTemplate` per layer kind
+owns lowering, emission, emulation and cost, so a new layer plugs in with
+one ``register_template`` call.
 
 Entry point for users: ``Creator.translate(st, target="rtl",
 options=RTLOptions(...))`` — "rtl" resolves to :data:`RTL_TARGET` through the
@@ -16,9 +21,13 @@ from repro.rtl.backend import (RTL_TARGET, RTLExecutable,  # noqa: F401
 from repro.rtl.emit import emit_graph, write_artifacts  # noqa: F401
 from repro.rtl.emulator import (EmulationResult, RTLEmulator,  # noqa: F401
                                 assert_bit_exact, reference_apply)
-from repro.rtl.ir import (ActApplyNode, ActLUTNode,  # noqa: F401
+from repro.rtl.ir import (ActApplyNode, ActLUTNode, Conv1dNode,  # noqa: F401
                           ElementwiseNode, Edge, Graph, LinearNode,
-                          LSTMCellNode, lower_linear_stack, lower_model,
+                          LSTMCellNode, lower_conv_model, lower_conv_stack,
+                          lower_linear_stack, lower_lstm_model, lower_model,
                           validate_formats)
+from repro.rtl.oplib import (HWTemplate, get_template,  # noqa: F401
+                             list_templates, lowerable_families,
+                             register_template, unregister_template)
 from repro.rtl.resources import (NodeCost, ResourceReport,  # noqa: F401
                                  estimate, node_cost, synthesize)

@@ -11,7 +11,7 @@ stage-3 measurement (cycles × clock, duty-cycled power).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax
 
@@ -32,12 +32,20 @@ _EMULATOR_MODES = ("fused", "pallas", "jnp")
 class RTLOptions(TargetOptions):
     """Translate knobs for the RTL target — the Q-formats the design is
     quantized to and which emulator schedule executes it. Validation happens
-    at construction so a Workflow knob sweep fails fast, not mid-lowering."""
+    at construction so a Workflow knob sweep fails fast, not mid-lowering.
+
+    ``w_fmt_overrides`` maps a registered template kind to the weight format
+    *that* layer kind is quantized with (e.g. keep the conv taps at Q8.6
+    while narrowing everything else) — keys are validated against the
+    hardware-template registry so a typo'd kind fails here, with the list of
+    registered kinds, not silently mid-sweep.
+    """
 
     w_fmt: FxpFormat = FxpFormat(8, 6)
     act_fmt: FxpFormat = FxpFormat(8, 4)
     state_fmt: FxpFormat = FxpFormat(16, 8)
     emulator_mode: str = "fused"     # "fused" | "pallas" | "jnp"
+    w_fmt_overrides: Optional[Mapping[str, FxpFormat]] = None
 
     def __post_init__(self):
         if self.emulator_mode not in _EMULATOR_MODES:
@@ -49,6 +57,22 @@ class RTLOptions(TargetOptions):
             if not isinstance(fmt, FxpFormat):
                 raise TypeError(f"{name} must be an FxpFormat, got "
                                 f"{type(fmt).__name__}")
+        if self.w_fmt_overrides is not None:
+            from repro.rtl.oplib import get_template, list_templates
+
+            for kind, fmt in self.w_fmt_overrides.items():
+                tmpl = get_template(kind)    # unknown kind raises, listing
+                if not tmpl.has_weights:
+                    weighted = [k for k in list_templates()
+                                if get_template(k).has_weights]
+                    raise ValueError(
+                        f"w_fmt_overrides[{kind!r}]: template {kind!r} "
+                        f"carries no weight format; weight-carrying "
+                        f"kinds: {weighted}")
+                if not isinstance(fmt, FxpFormat):
+                    raise TypeError(
+                        f"w_fmt_overrides[{kind!r}] must be an FxpFormat, "
+                        f"got {type(fmt).__name__}")
 
 
 @dataclass
@@ -162,7 +186,8 @@ class RTLTarget:
                              model_flops=options.model_flops or 0.0,
                              w_fmt=options.w_fmt, act_fmt=options.act_fmt,
                              state_fmt=options.state_fmt,
-                             emulator_mode=options.emulator_mode)
+                             emulator_mode=options.emulator_mode,
+                             w_fmt_overrides=options.w_fmt_overrides)
 
 
 RTL_TARGET = RTLTarget()
@@ -174,10 +199,12 @@ def translate_rtl(cfg: ModelConfig, params, *,
                   act_fmt: FxpFormat = FxpFormat(8, 4),
                   state_fmt: FxpFormat = FxpFormat(16, 8),
                   model_flops: float = 0.0,
-                  emulator_mode: str = "fused"):
+                  emulator_mode: str = "fused",
+                  w_fmt_overrides=None):
     """Returns (SynthesisReport, RTLExecutable)."""
     graph = lower_model(cfg, params, w_fmt=w_fmt, act_fmt=act_fmt,
-                        state_fmt=state_fmt)
+                        state_fmt=state_fmt,
+                        w_fmt_overrides=w_fmt_overrides)
     artifacts = emit_graph(graph)
     rep = synthesize(graph, hw=hw, model_flops=model_flops,
                      n_artifacts=len(artifacts))

@@ -1,12 +1,16 @@
 """Template instantiation: IR graph -> named text artifacts.
 
-``emit_graph`` walks the IR and renders one entity per node plus the
-``.mem`` initialization files (weights/biases/LUT tables as two's-complement
-hex, straight from ``fxp_to_int``) and a top-level ``<design>.vhd`` that
-wires the instances together — the "press the button" output of
+``emit_graph`` walks the IR and asks each node's registered
+:class:`~repro.rtl.oplib.HWTemplate` to render its entity plus the ``.mem``
+initialization files (weights/biases/LUT tables as two's-complement hex,
+straight from ``fxp_to_int``), then wires the instances into a top-level
+``<design>.vhd`` — the "press the button" output of
 ``Creator.translate(st, target="rtl")``. A ``manifest.json`` records every
 edge's Q-format so the emulator, the Elastic Node loader, and the artifacts
 stay mutually consistent.
+
+There is no per-op branching here (DESIGN.md §9): the walk is pure registry
+dispatch, so a newly registered template emits without touching this module.
 """
 from __future__ import annotations
 
@@ -14,113 +18,36 @@ import json
 from typing import Dict
 
 from repro.rtl import templates as T
-from repro.rtl.ir import (ActApplyNode, ActLUTNode, ElementwiseNode, Graph,
-                          LinearNode, LSTMCellNode)
-from repro.rtl.resources import LINEAR_DSP, LSTM_DSP, node_cost
-
-
-def _header(graph: Graph, node_name: str) -> str:
-    return T.HEADER.substitute(name=node_name, design=graph.name,
-                               node=node_name)
-
-
-def _emit_linear(graph: Graph, n: LinearNode, out: Dict[str, str]) -> None:
-    w_mem, b_mem = f"{n.name}_w.mem", f"{n.name}_b.mem"
-    out[w_mem] = T.to_hex_lines(n.weight_int(), n.w_fmt.total_bits)
-    out[b_mem] = T.to_hex_lines(n.bias_int(), 32)
-    in_fmt, out_fmt = n.in_fmt, n.out_fmt
-    shift = in_fmt.frac_bits + n.w_fmt.frac_bits - out_fmt.frac_bits
-    out[f"{n.name}.vhd"] = T.LINEAR.substitute(
-        header=_header(graph, n.name), name=n.name,
-        in_features=n.weight.shape[0], out_features=n.weight.shape[1],
-        x_generic=T.fmt_generic("X", in_fmt),
-        w_generic=T.fmt_generic("W", n.w_fmt),
-        y_generic=T.fmt_generic("Y", out_fmt),
-        x_width=n.weight.shape[0] * in_fmt.total_bits,
-        y_width=n.weight.shape[1] * out_fmt.total_bits,
-        macs=n.macs(), n_dsp=LINEAR_DSP, w_mem=w_mem, b_mem=b_mem,
-        rom_depth=int(n.weight.size), w_bits=n.w_fmt.total_bits,
-        requant_shift=shift)
-
-
-def _emit_lstm(graph: Graph, n: LSTMCellNode, out: Dict[str, str]) -> None:
-    w_mem, b_mem = f"{n.name}_w.mem", f"{n.name}_b.mem"
-    out[w_mem] = T.to_hex_lines(n.weight_int(), n.w_fmt.total_bits)
-    out[b_mem] = T.to_hex_lines(n.bias_int(), 32)
-    out[f"{n.name}.vhd"] = T.LSTM_CELL.substitute(
-        header=_header(graph, n.name), name=n.name,
-        d_in=n.d_in, hidden=n.hidden, seq_len=n.seq_len,
-        x_generic=T.fmt_generic("X", n.act_fmt),
-        w_generic=T.fmt_generic("W", n.w_fmt),
-        c_generic=T.fmt_generic("C", n.state_fmt),
-        x_width=n.d_in * n.act_fmt.total_bits,
-        h_width=n.hidden * n.act_fmt.total_bits,
-        macs=n.macs(), n_dsp=LSTM_DSP, w_mem=w_mem, b_mem=b_mem,
-        sigmoid_lut=n.sigmoid_lut, tanh_lut=n.tanh_lut,
-        act_bits=n.act_fmt.total_bits)
-
-
-def _emit_lut(graph: Graph, n: ActLUTNode, out: Dict[str, str]) -> None:
-    mem = f"{n.name}.mem"
-    out[mem] = T.to_hex_lines(n.table(), n.out_fmt.total_bits)
-    out[f"{n.name}.vhd"] = T.ACT_LUT.substitute(
-        header=_header(graph, n.name), name=n.name, kind=n.kind,
-        in_bits=n.in_fmt.total_bits, out_bits=n.out_fmt.total_bits,
-        depth=n.depth, mem=mem, offset=-n.in_fmt.lo)
-
-
-def _emit_elementwise(graph: Graph, n: ElementwiseNode,
-                      out: Dict[str, str]) -> None:
-    out[f"{n.name}.vhd"] = T.ELEMENTWISE.substitute(
-        header=_header(graph, n.name), name=n.name,
-        a_generic=T.fmt_generic("A", n.a_fmt),
-        b_generic=T.fmt_generic("B", n.b_fmt),
-        y_generic=T.fmt_generic("Y", n.out_fmt),
-        a_width=graph.edges[n.inputs[0]].bits,
-        b_width=graph.edges[n.inputs[1]].bits,
-        y_width=graph.edges[n.outputs[0]].bits,
-        op_sym="*" if n.kind == "mul" else "+")
+from repro.rtl.ir import Graph
+from repro.rtl.oplib import get_template
+from repro.rtl.resources import node_cost
 
 
 def _emit_top(graph: Graph, out: Dict[str, str]) -> None:
-    """Wire the instances: combinational LUT applications tap the shared ROM
-    entity (ports a/q); sequential nodes chain enable -> done."""
-    compute = [n for n in graph.nodes
-               if isinstance(n, (LinearNode, LSTMCellNode, ElementwiseNode,
-                                 ActApplyNode))]
+    """Wire the instances: combinational templates (LUT applications) tap
+    their shared entity directly; sequential ones chain enable -> done."""
+    compute = [(n, t) for n, t in ((n, get_template(n.op))
+                                   for n in graph.nodes) if t.in_netlist]
     signals = [f"  signal {e.name} : std_logic_vector({e.bits}-1 downto 0);"
                for e in graph.edges.values()
                if e.name not in graph.inputs and e.name not in graph.outputs]
     instances = []
-    seq_nodes = [n for n in compute if not isinstance(n, ActApplyNode)]
+    seq_nodes = [n for n, t in compute if t.sequential]
     last_seq = seq_nodes[-1] if seq_nodes else None
     prev_done = "enable"
-    for n in compute:
-        wire_in, wire_out = n.inputs[0], n.outputs[0]
-        if isinstance(n, ActApplyNode):       # combinational ROM lookup
-            instances.append(T.LUT_INSTANCE.substitute(
-                label=f"i_{n.name}", entity=n.lut,
-                wire_in=wire_in, wire_out=wire_out))
+    for n, t in compute:
+        if not t.sequential:                  # combinational: no handshake
+            instances.append(t.instance(graph, n, enable="", done=""))
             continue
         done = "done" if n is last_seq else f"done_{n.name}"
         if done != "done":
             signals.append(f"  signal {done} : std_logic;")
-        if isinstance(n, ElementwiseNode):
-            instances.append(T.EW_INSTANCE.substitute(
-                label=f"i_{n.name}", entity=n.name, enable=prev_done,
-                wire_a=n.inputs[0], wire_b=n.inputs[1],
-                wire_out=wire_out, done=done))
-        else:
-            port_out = "h_out" if isinstance(n, LSTMCellNode) else "y"
-            instances.append(T.INSTANCE.substitute(
-                label=f"i_{n.name}", entity=n.name, enable=prev_done,
-                port_in="x", wire_in=wire_in, port_out=port_out,
-                wire_out=wire_out, done=done))
+        instances.append(t.instance(graph, n, enable=prev_done, done=done))
         prev_done = done
     x_e = graph.edges[graph.inputs[0]]
     y_e = graph.edges[graph.outputs[0]]
     out[f"{graph.name}.vhd"] = T.NETWORK.substitute(
-        header=_header(graph, graph.name), name=graph.name,
+        header=T.header(graph.name, graph.name), name=graph.name,
         x_width=x_e.bits, y_width=y_e.bits,
         signals="\n".join(signals), instances="".join(instances))
 
@@ -140,18 +67,10 @@ def _manifest(graph: Graph) -> str:
 
 
 def emit_graph(graph: Graph) -> Dict[str, str]:
-    """Render every node; returns {filename: text}."""
+    """Render every node through its template; returns {filename: text}."""
     out: Dict[str, str] = {}
     for n in graph.nodes:
-        if isinstance(n, LinearNode):
-            _emit_linear(graph, n, out)
-        elif isinstance(n, LSTMCellNode):
-            _emit_lstm(graph, n, out)
-        elif isinstance(n, ActLUTNode):
-            _emit_lut(graph, n, out)
-        elif isinstance(n, ElementwiseNode):
-            _emit_elementwise(graph, n, out)
-        # ActApplyNode is wiring-only: it instantiates the shared LUT entity
+        get_template(n.op).emit(graph, n, out)
     _emit_top(graph, out)
     out["manifest.json"] = _manifest(graph)
     return out

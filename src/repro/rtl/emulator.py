@@ -1,12 +1,14 @@
 """Bit-exact integer emulator of the emitted RTL — the backend's verifier.
 
-Every IR node's integer semantics (DESIGN.md §4) are implemented twice:
+Every IR node's integer semantics (DESIGN.md §4) are implemented twice, on
+the node's registered :class:`~repro.rtl.oplib.HWTemplate`:
 
-* :func:`reference_apply` — the float oracle, built *only* from
+* ``HWTemplate.reference`` — the float oracle, built *only* from
   ``fxp_quantize`` / the hard activations, i.e. the semantics the QAT stage
-  trains against;
-* :class:`RTLEmulator` — vectorized int32 arithmetic (what the DSP slices
-  compute), with a fused Pallas kernel for the LSTM-cell window.
+  trains against (driven here by :func:`reference_apply`);
+* ``HWTemplate.execute`` — vectorized int32 arithmetic (what the DSP slices
+  compute), with a fused Pallas kernel for the LSTM-cell window (driven
+  here by :class:`RTLEmulator`).
 
 The contract is exact equality, integer for integer, not a tolerance:
 ``emulator.run(x)`` must satisfy ``y_int == round(reference_apply(x) * 2**f)``
@@ -18,20 +20,23 @@ overflowing keeps the f32 oracle exact.
 
 Execution model (DESIGN.md §7): the emulator is a *staged executor*.
 ``__init__`` hoists every weight/bias/LUT conversion to a device constant
-once; the graph walk is traced into a single ``jax.jit``-compiled program
-per ``(input shape, dtype)``, held in a small LRU — so repeated
-verification/measurement calls never retrace and never re-upload. Three
-execution paths share the bit-exactness contract:
+once (``HWTemplate.prepare``); the graph walk is traced into a single
+``jax.jit``-compiled program per ``(input shape, dtype)``, held in a small
+LRU — so repeated verification/measurement calls never retrace and never
+re-upload. Three execution paths share the bit-exactness contract:
 
 * ``mode="fused"`` (default) — one :mod:`repro.kernels.lstm_cell_int`
   dispatch per cell per window (weights + both ROMs VMEM-resident);
-* ``mode="pallas"`` — one :func:`mac_int_pallas` dispatch per timestep
-  (the PR-1 schedule, kept as a cross-check);
+* ``mode="pallas"`` — one :func:`~repro.rtl.oplib.mac_int_pallas` dispatch
+  per timestep (the PR-1 schedule, kept as a cross-check);
 * ``mode="jnp"`` — plain-jnp per-step reference.
+
+The emulator itself is op-agnostic: it owns staging, the program cache and
+batching, and exposes ``prepared``/``lookup``/``interpret`` as the execution
+context templates run against. Per-op math lives in :mod:`repro.rtl.oplib`.
 """
 from __future__ import annotations
 
-import functools
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Union
@@ -41,50 +46,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import use_interpret
-from repro.kernels.lstm_cell_int import CellSpec, lstm_window_int
-from repro.quant.fixedpoint import (FxpFormat, fxp_quantize, fxp_requant_int,
-                                    fxp_to_int)
-from repro.quant.qat import hard_sigmoid, hard_tanh
-from repro.rtl.ir import (ActApplyNode, ActLUTNode, ElementwiseNode, Graph,
-                          LinearNode, LSTMCellNode)
-
-# --------------------------------------------------------------------------- #
-# Pallas template: the gate MAC (int matmul + bias + requant + saturate)
-# --------------------------------------------------------------------------- #
-
-
-def _mac_kernel(xh_ref, w_ref, b_ref, o_ref, *, shift: int, lo: int, hi: int):
-    acc = jax.lax.dot_general(
-        xh_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
-    acc = acc + b_ref[...]
-    # same requant primitive as the jnp path — one rounding implementation
-    q = fxp_requant_int(acc, shift, FxpFormat(32, 0))
-    o_ref[...] = jnp.clip(q, lo, hi)
-
-
-@functools.partial(jax.jit, static_argnames=("shift", "lo", "hi",
-                                             "interpret"))
-def mac_int_pallas(xh: jax.Array, w: jax.Array, b: jax.Array, *,
-                   shift: int, lo: int, hi: int,
-                   interpret: bool = True) -> jax.Array:
-    """(B, K) int32 @ (K, N) int32 + b, requantized: one template invocation."""
-    from jax.experimental import pallas as pl
-
-    B, _ = xh.shape
-    N = w.shape[1]
-    return pl.pallas_call(
-        functools.partial(_mac_kernel, shift=shift, lo=lo, hi=hi),
-        out_shape=jax.ShapeDtypeStruct((B, N), jnp.int32),
-        interpret=interpret,
-    )(xh, w, b.reshape(1, -1))
-
-
-def _mac_int_jnp(xh, w, b, *, shift, lo, hi):
-    acc = jax.lax.dot_general(xh, w, (((1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.int32) + b
-    return jnp.clip(fxp_requant_int(acc, shift, FxpFormat(32, 0)), lo, hi)
-
+from repro.quant.fixedpoint import fxp_to_int
+# mac primitives live in the op library now; re-exported for compatibility
+from repro.rtl.oplib import (_mac_int_jnp, get_template,  # noqa: F401
+                             mac_int, mac_int_pallas)
+from repro.rtl.ir import Graph
 
 # --------------------------------------------------------------------------- #
 # Integer emulator
@@ -119,109 +85,39 @@ class RTLEmulator:
                              f"got {self.mode!r}")
         if max_programs < 1:
             raise ValueError(f"max_programs must be >= 1, got {max_programs}")
-        self._interpret = use_interpret()
+        self.interpret = use_interpret()
         # ---- stage 0: hoist every host->device conversion, once ----------
+        # each template declares its constants (weights, biases, ROM tables,
+        # jit-static specs); ndarray values become device int32 residents.
         self._lut_nodes = graph.act_luts()
-        self._luts = {name: jnp.asarray(n.table(), jnp.int32)
-                      for name, n in self._lut_nodes.items()}
-        self._params = {
-            n.name: (jnp.asarray(n.weight_int(), jnp.int32),
-                     jnp.asarray(n.bias_int(), jnp.int32))
-            for n in graph.nodes
-            if isinstance(n, (LinearNode, LSTMCellNode))}
-        self._specs = {
-            n.name: CellSpec(
-                seq_len=n.seq_len, d_in=n.d_in, hidden=n.hidden,
-                act_fmt=n.act_fmt, state_fmt=n.state_fmt, w_fmt=n.w_fmt,
-                sig_lo=self._lut_nodes[n.sigmoid_lut].lo,
-                tanh_lo=self._lut_nodes[n.tanh_lut].lo)
-            for n in graph.nodes if isinstance(n, LSTMCellNode)}
+        self._prep: Dict[str, Dict] = {}
+        for n in graph.nodes:
+            raw = get_template(n.op).prepare(n, graph)
+            self._prep[n.name] = {
+                k: (jnp.asarray(v, jnp.int32)
+                    if isinstance(v, np.ndarray) else v)
+                for k, v in raw.items()}
         # ---- compiled-program cache: (shape, dtype) -> jitted graph walk -
         self._programs: "OrderedDict" = OrderedDict()
         self._max_programs = max_programs
         self.trace_count = 0             # how many times the walk was traced
 
-    # -- primitive schedules -------------------------------------------------
-    def _mac(self, xh, w, b, *, shift, fmt: FxpFormat, mode: str):
-        if mode == "jnp":
-            return _mac_int_jnp(xh, w, b, shift=shift, lo=fmt.lo, hi=fmt.hi)
-        return mac_int_pallas(xh, w, b, shift=shift, lo=fmt.lo,
-                              hi=fmt.hi, interpret=self._interpret)
+    # -- execution context handed to the templates ---------------------------
+    def prepared(self, name: str) -> Dict:
+        """The hoisted device constants of node ``name``."""
+        return self._prep[name]
 
-    def _lookup(self, lut_name: str, codes: jax.Array) -> jax.Array:
-        node = self._lut_nodes[lut_name]
-        return jnp.take(self._luts[lut_name], codes - node.lo)
-
-    def _linear(self, n: LinearNode, x_int: jax.Array,
-                mode: str) -> jax.Array:
-        w, b = self._params[n.name]
-        shift = n.in_fmt.frac_bits + n.w_fmt.frac_bits - n.out_fmt.frac_bits
-        return self._mac(x_int.astype(jnp.int32), w, b, shift=shift,
-                         fmt=n.out_fmt, mode=mode)
-
-    def _lstm_cell(self, n: LSTMCellNode, x_int: jax.Array,
-                   mode: str) -> jax.Array:
-        w, b = self._params[n.name]
-        if mode == "fused":
-            return lstm_window_int(
-                x_int.astype(jnp.int32), w, b,
-                self._luts[n.sigmoid_lut], self._luts[n.tanh_lut],
-                spec=self._specs[n.name])
-        B = x_int.shape[0]
-        A, C = n.act_fmt, n.state_fmt
-        af, cf = A.frac_bits, C.frac_bits
-        h = jnp.zeros((B, n.hidden), jnp.int32)
-        c = jnp.zeros((B, n.hidden), jnp.int32)
-        outs = []
-        for t in range(n.seq_len):
-            xh = jnp.concatenate([x_int[:, t].astype(jnp.int32), h], axis=-1)
-            z = self._mac(xh, w, b, shift=n.mac_shift, fmt=A, mode=mode)
-            i, f, g, o = jnp.split(z, 4, axis=-1)
-            si = self._lookup(n.sigmoid_lut, i)
-            sf = self._lookup(n.sigmoid_lut, f)
-            so = self._lookup(n.sigmoid_lut, o)
-            tg = self._lookup(n.tanh_lut, g)
-            # align si*tg (scale 2·af) to sf*c (scale af+cf): << (cf - af)
-            term = sf * c + jax.lax.shift_left(si * tg, n.state_align_shift)
-            c = fxp_requant_int(term, af + cf, C)
-            c_a = fxp_requant_int(c, cf, A)
-            tc = self._lookup(n.tanh_lut, c_a)
-            h = fxp_requant_int(so * tc, 2 * af, A)
-            outs.append(h)
-        return jnp.stack(outs, axis=1)                     # (B, S, H)
-
-    def _elementwise(self, n: ElementwiseNode, a, b) -> jax.Array:
-        fa, fb = n.a_fmt.frac_bits, n.b_fmt.frac_bits
-        a = a.astype(jnp.int32)
-        b = b.astype(jnp.int32)
-        if n.kind == "mul":
-            return fxp_requant_int(a * b, fa + fb, n.out_fmt)
-        hi = max(fa, fb)
-        a = jax.lax.shift_left(a, hi - fa)
-        b = jax.lax.shift_left(b, hi - fb)
-        return fxp_requant_int(a + b, hi, n.out_fmt)
+    def lookup(self, lut_name: str, codes: jax.Array) -> jax.Array:
+        """Shared-ROM gather: table is indexed by ``code - lo``."""
+        return jnp.take(self._prep[lut_name]["table"],
+                        codes - self._lut_nodes[lut_name].lo)
 
     # -- graph walk (traced once per shape, then replayed) -------------------
     def _execute(self, x_int: jax.Array, *, mode: str) -> Dict[str, jax.Array]:
         g = self.graph
         env: Dict[str, jax.Array] = {g.inputs[0]: x_int}
         for n in g.nodes:
-            if isinstance(n, ActLUTNode):
-                continue
-            src = env[n.inputs[0]]
-            if isinstance(n, LSTMCellNode):
-                # a stacked cell consumes the previous cell's full sequence
-                src = env.get(n.inputs[0] + ".seq", src)
-                seq = self._lstm_cell(n, src, mode)
-                env[n.outputs[0]] = seq[:, -1]
-                env[n.outputs[0] + ".seq"] = seq
-            elif isinstance(n, LinearNode):
-                env[n.outputs[0]] = self._linear(n, src, mode)
-            elif isinstance(n, ActApplyNode):
-                env[n.outputs[0]] = self._lookup(n.lut, src)
-            elif isinstance(n, ElementwiseNode):
-                env[n.outputs[0]] = self._elementwise(
-                    n, src, env[n.inputs[1]])
+            get_template(n.op).execute(n, env, self, mode)
         return env
 
     def _program(self, shape, dtype):
@@ -307,58 +203,18 @@ class RTLEmulator:
 # --------------------------------------------------------------------------- #
 
 
-def _q(x, fmt: FxpFormat):
-    return fxp_quantize(x, fmt)
-
-
-def _ref_bias(b, in_fmt: FxpFormat, w_fmt: FxpFormat):
-    return _q(b, FxpFormat(32, in_fmt.frac_bits + w_fmt.frac_bits))
-
-
 def reference_apply(graph: Graph, x: jax.Array) -> jax.Array:
-    """The fxp_quantize reference the emulator must match bit-for-bit."""
-    env = {graph.inputs[0]:
-           _q(x, graph.edges[graph.inputs[0]].fmt)}
-    luts = {n.name: n for n in graph.nodes if isinstance(n, ActLUTNode)}
+    """The fxp_quantize reference the emulator must match bit-for-bit.
 
-    def act(node: ActLUTNode, v):
-        fn = hard_sigmoid if node.kind == "hard_sigmoid" else hard_tanh
-        return _q(fn(_q(v, node.in_fmt)), node.out_fmt)
+    Registry-dispatched like the integer walk: every node's float semantics
+    live on its template (``HWTemplate.reference``).
+    """
+    from repro.rtl.oplib import ref_q
 
+    env = {graph.inputs[0]: ref_q(x, graph.edges[graph.inputs[0]].fmt)}
+    luts = graph.act_luts()
     for n in graph.nodes:
-        if isinstance(n, ActLUTNode):
-            continue
-        src = env[n.inputs[0]]
-        if isinstance(n, LinearNode):
-            wq = _q(jnp.asarray(n.weight), n.w_fmt)
-            bq = _ref_bias(jnp.asarray(n.bias), n.in_fmt, n.w_fmt)
-            env[n.outputs[0]] = _q(src @ wq + bq, n.out_fmt)
-        elif isinstance(n, LSTMCellNode):
-            src = env.get(n.inputs[0] + ".seq", src)
-            A, C = n.act_fmt, n.state_fmt
-            sig, tanh = luts[n.sigmoid_lut], luts[n.tanh_lut]
-            wq = _q(jnp.asarray(n.weight), n.w_fmt)
-            bq = _ref_bias(jnp.asarray(n.bias), A, n.w_fmt)
-            B = src.shape[0]
-            h = jnp.zeros((B, n.hidden), jnp.float32)
-            c = jnp.zeros((B, n.hidden), jnp.float32)
-            outs = []
-            for t in range(n.seq_len):
-                z = _q(jnp.concatenate([src[:, t], h], axis=-1) @ wq + bq, A)
-                i, f, g, o = jnp.split(z, 4, axis=-1)
-                si, sf, so = act(sig, i), act(sig, f), act(sig, o)
-                tg = act(tanh, g)
-                c = _q(sf * c + si * tg, C)
-                h = _q(so * act(tanh, _q(c, A)), A)
-                outs.append(h)
-            env[n.outputs[0]] = h
-            env[n.outputs[0] + ".seq"] = jnp.stack(outs, axis=1)
-        elif isinstance(n, ActApplyNode):
-            env[n.outputs[0]] = act(luts[n.lut], src)
-        elif isinstance(n, ElementwiseNode):
-            a, b = src, env[n.inputs[1]]
-            v = a * b if n.kind == "mul" else a + b
-            env[n.outputs[0]] = _q(v, n.out_fmt)
+        get_template(n.op).reference(n, env, luts)
     return env[graph.outputs[0]]
 
 

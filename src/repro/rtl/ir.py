@@ -2,10 +2,12 @@
 
 The ElasticAI-Creator lowers a trained, quantized model into a small graph of
 hardware-template instances before emitting VHDL. This module is that
-lowering: a :class:`Graph` of four node kinds
+lowering: a :class:`Graph` of node kinds, one per registered hardware
+template (:mod:`repro.rtl.oplib`):
 
     linear     — y = requant(x·W + b)            (BRAM weights, serial MACs)
     lstm_cell  — the paper's gate-fused LSTM template over one window
+    conv1d     — depthwise/strided 1-D convolution (BRAM tap weights)
     act_lut    — ROM lookup for hard_sigmoid / hard_tanh
     elementwise— mul/add of two same-shape operands + requant
 
@@ -13,17 +15,20 @@ whose *edges* carry :class:`~repro.quant.fixedpoint.FxpFormat` annotations, so
 every wire in the design has an exact Q-format. The integer semantics of each
 node are defined once (DESIGN.md §4) and implemented twice: the float
 ``fxp_quantize`` reference and the int32 emulator in :mod:`repro.rtl.emulator`
-must agree integer-for-integer.
+must agree integer-for-integer. Both implementations live on the node's
+:class:`~repro.rtl.oplib.HWTemplate` (DESIGN.md §9) — this module only owns
+the node/edge datatypes and the model-level lowering entry points.
 
-``lower_model`` handles the paper's ``elastic-lstm`` family;
-``lower_linear_stack`` lowers plain MLP/linear parameter stacks (the FFN-shaped
-workloads the creator also supports).
+``lower_model`` dispatches on ``cfg.family`` through the template registry
+(``lstm`` → the gate-fused cell stack, ``conv1d`` → the TCN-style depthwise
+stack); ``lower_linear_stack`` / ``lower_conv_stack`` lower plain parameter
+stacks directly.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -53,7 +58,7 @@ class Edge:
 @dataclass
 class Node:
     name: str
-    op: str                          # linear | lstm_cell | act_lut | elementwise
+    op: str              # a registered template kind (oplib.list_templates())
     inputs: List[str]
     outputs: List[str]
 
@@ -61,15 +66,46 @@ class Node:
         return 0
 
 
+def _require_array(node: Node, name: str, value, ndim: int) -> np.ndarray:
+    """Array fields are mandatory at construction: a half-built node must
+    fail here with a clear message, not deep inside emission/emulation."""
+    if value is None:
+        raise TypeError(
+            f"{type(node).__name__} {node.name!r}: field {name!r} is "
+            f"required (got None) — pass the trained array when "
+            f"constructing the node")
+    arr = np.asarray(value, np.float32)
+    if arr.ndim != ndim:
+        raise ValueError(
+            f"{type(node).__name__} {node.name!r}: {name} must be "
+            f"{ndim}-D, got shape {arr.shape}")
+    return arr
+
+
 @dataclass
 class LinearNode(Node):
-    """y = requant(x @ W + b): accum at scale a.frac+w.frac -> out_fmt."""
+    """y = requant(x @ W + b): accum at scale a.frac+w.frac -> out_fmt.
 
-    weight: np.ndarray = None        # (in, out) f32
-    bias: np.ndarray = None          # (out,) f32
+    The input is flattened per sample before the MAC loop (a serial-MAC
+    template reads its operand BRAM linearly), so an upstream node may
+    legally produce a multi-axis edge — e.g. the (T, C) output of a conv1d
+    stack feeding a dense head.
+    """
+
+    weight: np.ndarray               # (in, out) f32 — required
+    bias: np.ndarray                 # (out,) f32 — required
     w_fmt: FxpFormat = FxpFormat(8, 6)
     in_fmt: FxpFormat = FxpFormat(8, 4)
     out_fmt: FxpFormat = FxpFormat(16, 8)
+
+    def __post_init__(self):
+        self.weight = _require_array(self, "weight", self.weight, 2)
+        self.bias = _require_array(self, "bias", self.bias, 1)
+        if self.bias.shape[0] != self.weight.shape[1]:
+            raise ValueError(
+                f"LinearNode {self.name!r}: bias shape {self.bias.shape} "
+                f"does not match weight out-features "
+                f"{self.weight.shape[1]}")
 
     def macs(self) -> int:
         return int(self.weight.shape[0] * self.weight.shape[1])
@@ -94,8 +130,8 @@ class LSTMCellNode(Node):
     ROMs at 2**act_bits words, the standard RTL trick.
     """
 
-    weight: np.ndarray = None        # (d_in + hidden, 4*hidden)
-    bias: np.ndarray = None          # (4*hidden,)
+    weight: np.ndarray               # (d_in + hidden, 4*hidden) — required
+    bias: np.ndarray                 # (4*hidden,) — required
     w_fmt: FxpFormat = FxpFormat(8, 6)
     act_fmt: FxpFormat = FxpFormat(8, 4)
     state_fmt: FxpFormat = FxpFormat(16, 8)
@@ -104,6 +140,20 @@ class LSTMCellNode(Node):
     hidden: int = 20
     sigmoid_lut: str = ""            # name of the ActLUTNode serving σ
     tanh_lut: str = ""
+
+    def __post_init__(self):
+        self.weight = _require_array(self, "weight", self.weight, 2)
+        self.bias = _require_array(self, "bias", self.bias, 1)
+        want = (self.d_in + self.hidden, 4 * self.hidden)
+        if tuple(self.weight.shape) != want:
+            raise ValueError(
+                f"LSTMCellNode {self.name!r}: weight shape "
+                f"{tuple(self.weight.shape)} != {want} "
+                f"(d_in={self.d_in}, hidden={self.hidden})")
+        if self.bias.shape[0] != 4 * self.hidden:
+            raise ValueError(
+                f"LSTMCellNode {self.name!r}: bias shape "
+                f"{self.bias.shape} != ({4 * self.hidden},)")
 
     def macs(self) -> int:
         per_step = (self.d_in + self.hidden) * 4 * self.hidden
@@ -126,6 +176,68 @@ class LSTMCellNode(Node):
     def state_align_shift(self) -> int:
         """Left-shift aligning σi·tg (scale 2·A.f) to σf·c (A.f+C.f)."""
         return self.state_fmt.frac_bits - self.act_fmt.frac_bits
+
+
+@dataclass
+class Conv1dNode(Node):
+    """Depthwise, strided 1-D convolution over a (seq, channels) window.
+
+    The TCN-style sensor template (the paper's pervasive-computing setting):
+    each channel carries its own ``kernel``-tap filter held in BRAM, the tap
+    MACs time-multiplex the same serial DSP schedule as the linear template,
+    and the accumulator is requantized exactly like a linear node —
+
+        y[t, c] = requant( sum_k x[t*stride + k, c] · w[k, c] + b[c] )
+
+    with the bias at the accumulator scale (in.frac + w.frac). Output length
+    is ``(seq_len - kernel) // stride + 1``; fan-in per output is ``kernel``,
+    which is what the §4 envelope check must cover.
+    """
+
+    weight: np.ndarray               # (kernel, channels) f32 — required
+    bias: np.ndarray                 # (channels,) f32 — required
+    kernel: int = 3
+    stride: int = 1
+    seq_len: int = 16
+    channels: int = 1
+    w_fmt: FxpFormat = FxpFormat(8, 6)
+    in_fmt: FxpFormat = FxpFormat(8, 4)
+    out_fmt: FxpFormat = FxpFormat(8, 4)
+
+    def __post_init__(self):
+        self.weight = _require_array(self, "weight", self.weight, 2)
+        self.bias = _require_array(self, "bias", self.bias, 1)
+        want = (self.kernel, self.channels)
+        if tuple(self.weight.shape) != want:
+            raise ValueError(
+                f"Conv1dNode {self.name!r}: weight shape "
+                f"{tuple(self.weight.shape)} != {want} "
+                f"(kernel={self.kernel}, channels={self.channels})")
+        if self.bias.shape[0] != self.channels:
+            raise ValueError(
+                f"Conv1dNode {self.name!r}: bias shape {self.bias.shape} "
+                f"!= ({self.channels},)")
+        if self.stride < 1 or self.kernel < 1:
+            raise ValueError(
+                f"Conv1dNode {self.name!r}: kernel/stride must be >= 1")
+        if self.out_len < 1:
+            raise ValueError(
+                f"Conv1dNode {self.name!r}: window seq_len={self.seq_len} "
+                f"too short for kernel={self.kernel} (out_len < 1)")
+
+    @property
+    def out_len(self) -> int:
+        return (self.seq_len - self.kernel) // self.stride + 1
+
+    def macs(self) -> int:
+        return self.out_len * self.kernel * self.channels
+
+    def weight_int(self) -> np.ndarray:
+        return np.asarray(fxp_to_int(self.weight, self.w_fmt))
+
+    def bias_int(self) -> np.ndarray:
+        bfmt = FxpFormat(32, self.in_fmt.frac_bits + self.w_fmt.frac_bits)
+        return np.asarray(fxp_to_int(self.bias, bfmt))
 
 
 @dataclass
@@ -198,7 +310,7 @@ class Graph:
 
     def act_luts(self) -> Dict[str, "ActLUTNode"]:
         """The shared ROM nodes, by name — the tables an executor preloads."""
-        return {n.name: n for n in self.nodes if isinstance(n, ActLUTNode)}
+        return {n.name: n for n in self.nodes if n.op == "act_lut"}
 
     def total_macs(self) -> int:
         return sum(n.macs() for n in self.nodes)
@@ -233,22 +345,60 @@ def validate_formats(*, act: FxpFormat, weight: FxpFormat, state: FxpFormat,
             f"precision {act} (cell-state alignment is a left shift)")
 
 
+def _kind_fmt(overrides: Optional[Mapping[str, FxpFormat]], kind: str,
+              default: FxpFormat) -> FxpFormat:
+    """Per-template-kind weight-format override (RTLOptions.w_fmt_overrides)."""
+    if not overrides:
+        return default
+    return overrides.get(kind, default)
+
+
+def _widest(*fmts: FxpFormat) -> FxpFormat:
+    """Envelope input: the widest of the weight formats actually lowered
+    (an override for a kind absent from this model must not widen it)."""
+    return max(fmts, key=lambda f: f.total_bits)
+
+
 # --------------------------------------------------------------------------- #
 # Lowering entry points
 # --------------------------------------------------------------------------- #
 
 
-def lower_model(cfg: ModelConfig, params, *, w_fmt: FxpFormat = FxpFormat(8, 6),
+def lower_model(cfg: ModelConfig, params, *,
+                w_fmt: FxpFormat = FxpFormat(8, 6),
                 act_fmt: FxpFormat = FxpFormat(8, 4),
-                state_fmt: FxpFormat = FxpFormat(16, 8)) -> Graph:
-    """Lower a quantized ModelConfig + trained params into the dataflow IR."""
+                state_fmt: FxpFormat = FxpFormat(16, 8),
+                w_fmt_overrides: Optional[Mapping[str, FxpFormat]] = None
+                ) -> Graph:
+    """Lower a quantized ModelConfig + trained params into the dataflow IR.
+
+    Dispatches on ``cfg.family`` through the hardware-template registry: the
+    template that declares the family (``lstm`` → ``lstm_cell``, ``conv1d`` →
+    ``conv1d``) owns the model-level lowering. Unknown families raise listing
+    the families that ARE lowerable, mirroring the registry errors.
+    """
+    from repro.rtl.oplib import lowering_for
+
+    return lowering_for(cfg.family)(
+        cfg, params, w_fmt=w_fmt, act_fmt=act_fmt, state_fmt=state_fmt,
+        w_fmt_overrides=w_fmt_overrides)
+
+
+def lower_lstm_model(cfg: ModelConfig, params, *,
+                     w_fmt: FxpFormat = FxpFormat(8, 6),
+                     act_fmt: FxpFormat = FxpFormat(8, 4),
+                     state_fmt: FxpFormat = FxpFormat(16, 8),
+                     w_fmt_overrides: Optional[Mapping[str, FxpFormat]] = None
+                     ) -> Graph:
+    """The paper's ``elastic-lstm`` family: stacked gate-fused cells + head."""
     if cfg.family != "lstm":
         raise NotImplementedError(
-            f"RTL lowering supports family='lstm' and linear stacks; "
-            f"got {cfg.family!r} (use lower_linear_stack for MLPs)")
+            f"lower_lstm_model lowers family='lstm', got {cfg.family!r}")
     c = cfg.lstm
-    validate_formats(act=act_fmt, weight=w_fmt, state=state_fmt,
-                     fan_in=c.in_features + c.hidden)
+    cell_w = _kind_fmt(w_fmt_overrides, "lstm_cell", w_fmt)
+    head_w = _kind_fmt(w_fmt_overrides, "linear", w_fmt)
+    validate_formats(act=act_fmt, weight=_widest(cell_w, head_w),
+                     state=state_fmt, fan_in=c.in_features + c.hidden)
     g = Graph(name=cfg.name)
     g.edges["x"] = Edge("x", (c.seq_len, c.in_features), act_fmt)
     g.inputs = ["x"]
@@ -270,7 +420,7 @@ def lower_model(cfg: ModelConfig, params, *, w_fmt: FxpFormat = FxpFormat(8, 6),
             outputs=[out_edge.name],
             weight=np.asarray(cell["w"], np.float32),
             bias=np.asarray(cell["b"], np.float32),
-            w_fmt=w_fmt, act_fmt=act_fmt, state_fmt=state_fmt,
+            w_fmt=cell_w, act_fmt=act_fmt, state_fmt=state_fmt,
             seq_len=c.seq_len, d_in=d_in, hidden=c.hidden,
             sigmoid_lut=sig.name, tanh_lut=tanh.name)
         g.add(node, out_edge)
@@ -281,7 +431,7 @@ def lower_model(cfg: ModelConfig, params, *, w_fmt: FxpFormat = FxpFormat(8, 6),
                      outputs=[y_edge.name],
                      weight=np.asarray(params["head_w"], np.float32),
                      bias=np.asarray(params["head_b"], np.float32),
-                     w_fmt=w_fmt, in_fmt=act_fmt, out_fmt=state_fmt),
+                     w_fmt=head_w, in_fmt=act_fmt, out_fmt=state_fmt),
           y_edge)
     g.outputs = [y_edge.name]
     return g
@@ -328,3 +478,95 @@ def lower_linear_stack(name: str,
             prev = edge2.name
     g.outputs = [prev]
     return g
+
+
+def lower_conv_stack(name: str,
+                     blocks: Sequence[Tuple[np.ndarray, np.ndarray]],
+                     head: Tuple[np.ndarray, np.ndarray],
+                     *, seq_len: int,
+                     stride: int = 1,
+                     w_fmt: FxpFormat = FxpFormat(8, 6),
+                     act_fmt: FxpFormat = FxpFormat(8, 4),
+                     state_fmt: FxpFormat = FxpFormat(16, 8),
+                     act: str = "hard_tanh",
+                     w_fmt_overrides: Optional[Mapping[str, FxpFormat]] = None
+                     ) -> Graph:
+    """Lower a TCN-style depthwise conv stack + dense head.
+
+    ``blocks`` is ``[(w (K, C), b (C,)), ...]`` applied with ``stride`` and
+    ``act`` between blocks; ``head`` is the dense readout ``(W (T·C, out),
+    b (out,))`` applied to the flattened final feature map. All conv
+    activations stay at ``act_fmt`` (conv → LUT → conv chains keep the ROMs
+    shared); the head accumulates into ``state_fmt`` like every other
+    readout.
+    """
+    if act not in ACT_KINDS:
+        raise ValueError(f"act must be one of {ACT_KINDS}")
+    if not blocks:
+        raise ValueError("lower_conv_stack needs at least one conv block")
+    channels = int(np.asarray(blocks[0][0]).shape[1])
+    conv_w = _kind_fmt(w_fmt_overrides, "conv1d", w_fmt)
+    head_w_fmt = _kind_fmt(w_fmt_overrides, "linear", w_fmt)
+    # envelope fan-in: every block accumulates its own kernel's tap count
+    max_kernel = max(int(np.asarray(w).shape[0]) for w, _ in blocks)
+    head_fan_in = int(np.asarray(head[0]).shape[0])
+    validate_formats(act=act_fmt, weight=_widest(conv_w, head_w_fmt),
+                     state=state_fmt, fan_in=max(max_kernel, head_fan_in))
+
+    g = Graph(name=name)
+    g.edges["x"] = Edge("x", (seq_len, channels), act_fmt)
+    g.inputs = ["x"]
+    lut = ActLUTNode(name=f"{act}_lut", op="act_lut", inputs=[], outputs=[],
+                     kind=act, in_fmt=act_fmt, out_fmt=act_fmt)
+    g.nodes.append(lut)
+
+    prev, t = "x", seq_len
+    for i, (w, b) in enumerate(blocks):
+        node = Conv1dNode(
+            name=f"conv1d_{i}", op="conv1d", inputs=[prev],
+            outputs=[f"c{i}"],
+            weight=np.asarray(w, np.float32), bias=np.asarray(b, np.float32),
+            kernel=int(np.asarray(w).shape[0]), stride=stride, seq_len=t,
+            channels=channels, w_fmt=conv_w, in_fmt=act_fmt,
+            out_fmt=act_fmt)
+        t = node.out_len
+        g.add(node, Edge(f"c{i}", (t, channels), act_fmt))
+        g.add(ActApplyNode(name=f"{act}_{i}", op="act_apply",
+                           inputs=[f"c{i}"], outputs=[f"z{i}"],
+                           lut=lut.name),
+              Edge(f"z{i}", (t, channels), act_fmt))
+        prev = f"z{i}"
+
+    hw, hb = head
+    if head_fan_in != t * channels:
+        raise ValueError(
+            f"head weight expects {head_fan_in} inputs but the conv stack "
+            f"produces {t}x{channels}={t * channels} features")
+    y_edge = Edge("y", (int(np.asarray(hw).shape[1]),), state_fmt)
+    g.add(LinearNode(name="linear_head", op="linear", inputs=[prev],
+                     outputs=[y_edge.name],
+                     weight=np.asarray(hw, np.float32),
+                     bias=np.asarray(hb, np.float32),
+                     w_fmt=head_w_fmt, in_fmt=act_fmt, out_fmt=state_fmt),
+          y_edge)
+    g.outputs = [y_edge.name]
+    return g
+
+
+def lower_conv_model(cfg: ModelConfig, params, *,
+                     w_fmt: FxpFormat = FxpFormat(8, 6),
+                     act_fmt: FxpFormat = FxpFormat(8, 4),
+                     state_fmt: FxpFormat = FxpFormat(16, 8),
+                     w_fmt_overrides: Optional[Mapping[str, FxpFormat]] = None
+                     ) -> Graph:
+    """The ``conv1d`` family (TCN-style sensor workload) → conv stack IR."""
+    if cfg.family != "conv1d":
+        raise NotImplementedError(
+            f"lower_conv_model lowers family='conv1d', got {cfg.family!r}")
+    c = cfg.conv1d
+    return lower_conv_stack(
+        cfg.name,
+        [(blk["w"], blk["b"]) for blk in params["blocks"]],
+        (params["head_w"], params["head_b"]),
+        seq_len=c.seq_len, stride=c.stride, w_fmt=w_fmt, act_fmt=act_fmt,
+        state_fmt=state_fmt, act=c.act, w_fmt_overrides=w_fmt_overrides)

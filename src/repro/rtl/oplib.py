@@ -1,0 +1,625 @@
+"""Pluggable hardware-template (op) library — one registry entry per layer
+kind, end-to-end (DESIGN.md §9).
+
+The ElasticAI-Creator's core promise is a *library of hardware templates*
+that a developer composes per model. This module is that library as a
+first-class API, mirroring the deployment-target registry (DESIGN.md §8):
+each :class:`HWTemplate` is one self-contained object owning the full
+vertical for its op —
+
+* **lower**   — the IR node class, plus (for templates that anchor a model
+  family) the model-level lowering hook behind ``ir.lower_model``;
+* **emit**    — the VHDL-like entity + ``.mem`` BRAM/ROM init files and the
+  top-netlist instantiation line;
+* **emulate** — the bit-exact int32 semantics (jitted jnp/Pallas execution
+  paths) *and* the ``fxp_quantize`` float oracle (``reference_apply``);
+* **cost**    — the XC7S15 resource/cycle formula (DESIGN.md §5).
+
+``emit.emit_graph``, ``RTLEmulator``/``reference_apply`` and
+``resources.node_cost`` are registry-dispatched walks: supporting a new
+layer means registering one template here — no edits to the walkers.
+Unknown kinds raise listing what IS registered, so the error doubles as
+discovery; double registration is an error unless ``overwrite=True``.
+
+The integer MAC primitives (the Pallas "DSP array" template shared by the
+linear/conv/per-step-LSTM schedules) live here too, so templates and the
+executor import them from one place.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.lstm_cell_int import CellSpec, lstm_window_int
+from repro.quant.fixedpoint import FxpFormat, fxp_quantize, fxp_requant_int
+from repro.quant.qat import hard_sigmoid, hard_tanh
+from repro.rtl import templates as T
+from repro.rtl.ir import (ActApplyNode, ActLUTNode, Conv1dNode,
+                          ElementwiseNode, Graph, LinearNode, LSTMCellNode,
+                          Node, lower_conv_model, lower_lstm_model)
+from repro.rtl.resources import (CONV_DSP, LINEAR_DSP, LSTM_DSP,
+                                 LUT_ROM_BITS, PIPE, NodeCost, brams_for)
+
+# --------------------------------------------------------------------------- #
+# Pallas template: the gate MAC (int matmul + bias + requant + saturate)
+# --------------------------------------------------------------------------- #
+
+
+def _mac_kernel(xh_ref, w_ref, b_ref, o_ref, *, shift: int, lo: int, hi: int):
+    acc = jax.lax.dot_general(
+        xh_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc = acc + b_ref[...]
+    # same requant primitive as the jnp path — one rounding implementation
+    q = fxp_requant_int(acc, shift, FxpFormat(32, 0))
+    o_ref[...] = jnp.clip(q, lo, hi)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "lo", "hi",
+                                             "interpret"))
+def mac_int_pallas(xh: jax.Array, w: jax.Array, b: jax.Array, *,
+                   shift: int, lo: int, hi: int,
+                   interpret: bool = True) -> jax.Array:
+    """(B, K) int32 @ (K, N) int32 + b, requantized: one template invocation."""
+    from jax.experimental import pallas as pl
+
+    B, _ = xh.shape
+    N = w.shape[1]
+    return pl.pallas_call(
+        functools.partial(_mac_kernel, shift=shift, lo=lo, hi=hi),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.int32),
+        interpret=interpret,
+    )(xh, w, b.reshape(1, -1))
+
+
+def _mac_int_jnp(xh, w, b, *, shift, lo, hi):
+    acc = jax.lax.dot_general(xh, w, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32) + b
+    return jnp.clip(fxp_requant_int(acc, shift, FxpFormat(32, 0)), lo, hi)
+
+
+def mac_int(xh: jax.Array, w: jax.Array, b: jax.Array, *, shift: int,
+            fmt: FxpFormat, mode: str, interpret: bool) -> jax.Array:
+    """The shared serial-MAC schedule, on either execution substrate."""
+    if mode == "jnp":
+        return _mac_int_jnp(xh, w, b, shift=shift, lo=fmt.lo, hi=fmt.hi)
+    return mac_int_pallas(xh, w, b, shift=shift, lo=fmt.lo, hi=fmt.hi,
+                          interpret=interpret)
+
+
+def requant_shift(in_fmt: FxpFormat, w_fmt: FxpFormat,
+                  out_fmt: FxpFormat) -> int:
+    """Right-shift taking a MAC accumulator (scale in.f + w.f) to out.f —
+    the one requant convention every weighted template shares."""
+    return in_fmt.frac_bits + w_fmt.frac_bits - out_fmt.frac_bits
+
+
+# --------------------------------------------------------------------------- #
+# Float-oracle helpers (identical semantics expressed with fxp_quantize only)
+# --------------------------------------------------------------------------- #
+
+
+def ref_q(x, fmt: FxpFormat):
+    return fxp_quantize(x, fmt)
+
+
+def ref_bias(b, in_fmt: FxpFormat, w_fmt: FxpFormat):
+    return ref_q(b, FxpFormat(32, in_fmt.frac_bits + w_fmt.frac_bits))
+
+
+def ref_act(lut: ActLUTNode, v):
+    fn = hard_sigmoid if lut.kind == "hard_sigmoid" else hard_tanh
+    return ref_q(fn(ref_q(v, lut.in_fmt)), lut.out_fmt)
+
+
+# --------------------------------------------------------------------------- #
+# The template contract
+# --------------------------------------------------------------------------- #
+
+
+class HWTemplate:
+    """One hardware template: the full vertical for one IR node kind.
+
+    Subclasses set ``kind`` (the ``Node.op`` string they serve) and
+    ``node_cls``, and implement the five hooks. ``family`` is optional: a
+    template that anchors a whole model family (the LSTM cell, the conv1d
+    block) also provides ``lower_model_fn`` so ``ir.lower_model`` can
+    dispatch on ``cfg.family``.
+
+    Netlist flags: ``in_netlist`` — the node appears in the top-level
+    netlist (shared ROM entities don't; they are instantiated where used);
+    ``sequential`` — it takes a slot in the enable→done handshake chain
+    (combinational LUT applications don't).
+    """
+
+    kind: str = ""
+    node_cls: type = Node
+    family: Optional[str] = None
+    lower_model_fn: Optional[Callable[..., Graph]] = None
+    in_netlist: bool = True
+    sequential: bool = True
+    #: the node carries a quantized weight array (targets of the per-kind
+    #: ``RTLOptions.w_fmt_overrides`` knob)
+    has_weights: bool = False
+    #: top-netlist port names for the default single-in/single-out instance
+    port_in: str = "x"
+    port_out: str = "y"
+
+    # ---- emulate ----------------------------------------------------------
+    def prepare(self, node: Node, graph: Graph) -> Dict:
+        """Host-side constants to hoist once at executor construction.
+
+        np.ndarray values are converted to device int32 constants; anything
+        else (e.g. a jit-static CellSpec) is stored as-is.
+        """
+        return {}
+
+    def execute(self, node: Node, env: Dict, em, mode: str) -> None:
+        """Int32 semantics: read input edges from ``env``, write outputs.
+
+        ``em`` is the executing :class:`~repro.rtl.emulator.RTLEmulator`
+        (``em.prepared(name)``, ``em.lookup(lut, codes)``,
+        ``em.interpret``); ``mode`` is one of its execution paths.
+        """
+        raise NotImplementedError
+
+    def reference(self, node: Node, env: Dict,
+                  luts: Dict[str, ActLUTNode]) -> None:
+        """Float-oracle semantics, built only from ``fxp_quantize``."""
+        raise NotImplementedError
+
+    # ---- emit -------------------------------------------------------------
+    def emit(self, graph: Graph, node: Node, out: Dict[str, str]) -> None:
+        """Render the entity text + ``.mem`` init files into ``out``."""
+        raise NotImplementedError
+
+    def instance(self, graph: Graph, node: Node, *, enable: str,
+                 done: str) -> str:
+        """The top-netlist instantiation line for this node."""
+        return T.INSTANCE.substitute(
+            label=f"i_{node.name}", entity=node.name, enable=enable,
+            port_in=self.port_in, wire_in=node.inputs[0],
+            port_out=self.port_out, wire_out=node.outputs[0], done=done)
+
+    # ---- cost -------------------------------------------------------------
+    def cost(self, node: Node) -> NodeCost:
+        return NodeCost.zero(node.name, node.op)
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+
+_REGISTRY: Dict[str, HWTemplate] = {}
+
+
+def register_template(template: HWTemplate, *,
+                      overwrite: bool = False) -> HWTemplate:
+    """Register ``template`` under ``template.kind``. Registering a kind
+    twice is an error unless ``overwrite=True`` (the escape hatch for a
+    deployment that swaps a built-in for a tuned variant)."""
+    kind = template.kind
+    if not kind:
+        raise ValueError(f"{type(template).__name__} has no kind set")
+    if not overwrite and kind in _REGISTRY:
+        raise ValueError(f"hardware template {kind!r} already registered "
+                         f"(registered: {list_templates()})")
+    _REGISTRY[kind] = template
+    return template
+
+
+def unregister_template(kind: str) -> None:
+    """Remove a registered kind (primarily for tests swapping templates)."""
+    _REGISTRY.pop(kind, None)
+
+
+def list_templates() -> List[str]:
+    """Names of every registered template kind, sorted."""
+    return sorted(_REGISTRY)
+
+
+def get_template(kind: str) -> HWTemplate:
+    """Resolve a node kind. Unknown kinds raise ``ValueError`` listing what
+    *is* registered, so the error message doubles as discovery."""
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown hardware template {kind!r}; registered templates: "
+            f"{list_templates()}") from None
+
+
+def lowerable_families() -> List[str]:
+    """Model families some registered template can lower end-to-end."""
+    return sorted({t.family for t in _REGISTRY.values() if t.family})
+
+
+def lowering_for(family: str) -> Callable[..., Graph]:
+    """The model-level lowering hook for ``family`` (``ir.lower_model``)."""
+    for t in _REGISTRY.values():
+        if t.family == family and t.lower_model_fn is not None:
+            return t.lower_model_fn
+    raise NotImplementedError(
+        f"no registered hardware template lowers family {family!r}; "
+        f"lowerable families: {lowerable_families()} "
+        f"(use lower_linear_stack/lower_conv_stack for parameter stacks)")
+
+
+# --------------------------------------------------------------------------- #
+# Built-in templates
+# --------------------------------------------------------------------------- #
+
+
+class LinearTemplate(HWTemplate):
+    """y = requant(flatten(x) @ W + b) — serial MACs, BRAM weights."""
+
+    kind = "linear"
+    node_cls = LinearNode
+    has_weights = True
+
+    def prepare(self, n: LinearNode, graph: Graph) -> Dict:
+        return {"w": n.weight_int(), "b": n.bias_int()}
+
+    def execute(self, n: LinearNode, env: Dict, em, mode: str) -> None:
+        x = env[n.inputs[0]].astype(jnp.int32)
+        x = x.reshape(x.shape[0], -1)            # serial MACs read linearly
+        p = em.prepared(n.name)
+        shift = requant_shift(n.in_fmt, n.w_fmt, n.out_fmt)
+        env[n.outputs[0]] = mac_int(x, p["w"], p["b"], shift=shift,
+                                    fmt=n.out_fmt, mode=mode,
+                                    interpret=em.interpret)
+
+    def reference(self, n: LinearNode, env: Dict, luts: Dict) -> None:
+        src = env[n.inputs[0]]
+        src = src.reshape(src.shape[0], -1)
+        wq = ref_q(jnp.asarray(n.weight), n.w_fmt)
+        bq = ref_bias(jnp.asarray(n.bias), n.in_fmt, n.w_fmt)
+        env[n.outputs[0]] = ref_q(src @ wq + bq, n.out_fmt)
+
+    def emit(self, graph: Graph, n: LinearNode, out: Dict[str, str]) -> None:
+        w_mem, b_mem = f"{n.name}_w.mem", f"{n.name}_b.mem"
+        out[w_mem] = T.to_hex_lines(n.weight_int(), n.w_fmt.total_bits)
+        out[b_mem] = T.to_hex_lines(n.bias_int(), 32)
+        out[f"{n.name}.vhd"] = T.LINEAR.substitute(
+            header=T.header(graph.name, n.name), name=n.name,
+            in_features=n.weight.shape[0], out_features=n.weight.shape[1],
+            x_generic=T.fmt_generic("X", n.in_fmt),
+            w_generic=T.fmt_generic("W", n.w_fmt),
+            y_generic=T.fmt_generic("Y", n.out_fmt),
+            x_width=n.weight.shape[0] * n.in_fmt.total_bits,
+            y_width=n.weight.shape[1] * n.out_fmt.total_bits,
+            macs=n.macs(), n_dsp=LINEAR_DSP, w_mem=w_mem, b_mem=b_mem,
+            rom_depth=int(n.weight.size), w_bits=n.w_fmt.total_bits,
+            requant_shift=requant_shift(n.in_fmt, n.w_fmt,
+                                        n.out_fmt))
+
+    def cost(self, n: LinearNode) -> NodeCost:
+        macs = n.macs()
+        mac_cycles = math.ceil(macs / LINEAR_DSP)
+        out = n.weight.shape[1]
+        w_bits = n.weight.size * n.w_fmt.total_bits
+        b_bits = n.bias.size * 32
+        return NodeCost(
+            n.name, n.op,
+            cycles=mac_cycles + out + PIPE,
+            active_cycles=mac_cycles + out,
+            dsp=LINEAR_DSP, bram36=brams_for(w_bits + b_bits),
+            lut=60 + 8 * n.out_fmt.total_bits)
+
+
+class LSTMCellTemplate(HWTemplate):
+    """The paper's gate-fused LSTM window template (DESIGN.md §4)."""
+
+    kind = "lstm_cell"
+    node_cls = LSTMCellNode
+    has_weights = True
+    family = "lstm"
+    lower_model_fn = staticmethod(lower_lstm_model)
+    port_out = "h_out"
+
+    def prepare(self, n: LSTMCellNode, graph: Graph) -> Dict:
+        luts = graph.act_luts()
+        return {"w": n.weight_int(), "b": n.bias_int(),
+                "spec": CellSpec(
+                    seq_len=n.seq_len, d_in=n.d_in, hidden=n.hidden,
+                    act_fmt=n.act_fmt, state_fmt=n.state_fmt, w_fmt=n.w_fmt,
+                    sig_lo=luts[n.sigmoid_lut].lo,
+                    tanh_lo=luts[n.tanh_lut].lo)}
+
+    def execute(self, n: LSTMCellNode, env: Dict, em, mode: str) -> None:
+        # a stacked cell consumes the previous cell's full sequence
+        src = env.get(n.inputs[0] + ".seq", env[n.inputs[0]])
+        p = em.prepared(n.name)
+        w, b = p["w"], p["b"]
+        if mode == "fused":
+            seq = lstm_window_int(
+                src.astype(jnp.int32), w, b,
+                em.prepared(n.sigmoid_lut)["table"],
+                em.prepared(n.tanh_lut)["table"], spec=p["spec"])
+        else:
+            B = src.shape[0]
+            A, C = n.act_fmt, n.state_fmt
+            af, cf = A.frac_bits, C.frac_bits
+            h = jnp.zeros((B, n.hidden), jnp.int32)
+            c = jnp.zeros((B, n.hidden), jnp.int32)
+            outs = []
+            for t in range(n.seq_len):
+                xh = jnp.concatenate([src[:, t].astype(jnp.int32), h],
+                                     axis=-1)
+                z = mac_int(xh, w, b, shift=n.mac_shift, fmt=A, mode=mode,
+                            interpret=em.interpret)
+                i, f, g, o = jnp.split(z, 4, axis=-1)
+                si = em.lookup(n.sigmoid_lut, i)
+                sf = em.lookup(n.sigmoid_lut, f)
+                so = em.lookup(n.sigmoid_lut, o)
+                tg = em.lookup(n.tanh_lut, g)
+                # align si*tg (scale 2·af) to sf*c (af+cf): << (cf - af)
+                term = sf * c + jax.lax.shift_left(si * tg,
+                                                   n.state_align_shift)
+                c = fxp_requant_int(term, af + cf, C)
+                c_a = fxp_requant_int(c, cf, A)
+                tc = em.lookup(n.tanh_lut, c_a)
+                h = fxp_requant_int(so * tc, 2 * af, A)
+                outs.append(h)
+            seq = jnp.stack(outs, axis=1)                   # (B, S, H)
+        env[n.outputs[0]] = seq[:, -1]
+        env[n.outputs[0] + ".seq"] = seq
+
+    def reference(self, n: LSTMCellNode, env: Dict, luts: Dict) -> None:
+        src = env.get(n.inputs[0] + ".seq", env[n.inputs[0]])
+        A, C = n.act_fmt, n.state_fmt
+        sig, tanh = luts[n.sigmoid_lut], luts[n.tanh_lut]
+        wq = ref_q(jnp.asarray(n.weight), n.w_fmt)
+        bq = ref_bias(jnp.asarray(n.bias), A, n.w_fmt)
+        B = src.shape[0]
+        h = jnp.zeros((B, n.hidden), jnp.float32)
+        c = jnp.zeros((B, n.hidden), jnp.float32)
+        outs = []
+        for t in range(n.seq_len):
+            z = ref_q(jnp.concatenate([src[:, t], h], axis=-1) @ wq + bq, A)
+            i, f, g, o = jnp.split(z, 4, axis=-1)
+            si, sf, so = ref_act(sig, i), ref_act(sig, f), ref_act(sig, o)
+            tg = ref_act(tanh, g)
+            c = ref_q(sf * c + si * tg, C)
+            h = ref_q(so * ref_act(tanh, ref_q(c, A)), A)
+            outs.append(h)
+        env[n.outputs[0]] = h
+        env[n.outputs[0] + ".seq"] = jnp.stack(outs, axis=1)
+
+    def emit(self, graph: Graph, n: LSTMCellNode,
+             out: Dict[str, str]) -> None:
+        w_mem, b_mem = f"{n.name}_w.mem", f"{n.name}_b.mem"
+        out[w_mem] = T.to_hex_lines(n.weight_int(), n.w_fmt.total_bits)
+        out[b_mem] = T.to_hex_lines(n.bias_int(), 32)
+        out[f"{n.name}.vhd"] = T.LSTM_CELL.substitute(
+            header=T.header(graph.name, n.name), name=n.name,
+            d_in=n.d_in, hidden=n.hidden, seq_len=n.seq_len,
+            x_generic=T.fmt_generic("X", n.act_fmt),
+            w_generic=T.fmt_generic("W", n.w_fmt),
+            c_generic=T.fmt_generic("C", n.state_fmt),
+            x_width=n.d_in * n.act_fmt.total_bits,
+            h_width=n.hidden * n.act_fmt.total_bits,
+            macs=n.macs(), n_dsp=LSTM_DSP, w_mem=w_mem, b_mem=b_mem,
+            sigmoid_lut=n.sigmoid_lut, tanh_lut=n.tanh_lut,
+            act_bits=n.act_fmt.total_bits)
+
+    def cost(self, n: LSTMCellNode) -> NodeCost:
+        per_step_macs = (n.d_in + n.hidden) * 4 * n.hidden
+        mac_cycles = math.ceil(per_step_macs / LSTM_DSP)
+        # elementwise state update: 4 DSP ops per hidden unit, 1/cycle each
+        # on the same MAC units -> hidden cycles; + pipeline refill
+        step = mac_cycles + n.hidden + PIPE
+        w_bits = n.weight.size * n.w_fmt.total_bits
+        b_bits = n.bias.size * 32
+        return NodeCost(
+            n.name, n.op,
+            cycles=n.seq_len * step,
+            active_cycles=n.seq_len * (mac_cycles + n.hidden),
+            dsp=LSTM_DSP, bram36=brams_for(w_bits + b_bits),
+            lut=150 + 12 * n.act_fmt.total_bits)
+
+
+class Conv1dTemplate(HWTemplate):
+    """Depthwise/strided 1-D convolution (TCN-style sensor workloads).
+
+    Execution reuses the shared serial-MAC template exactly the way the
+    fabric would: the (kernel, channels) taps are expanded once, at
+    prepare time, into a channel-block-diagonal (kernel·channels, channels)
+    matrix, and each output step is an im2col frame MAC'd through
+    :func:`mac_int` — the zero entries contribute nothing, so integer
+    values (and the §4 envelope, whose fan-in is ``kernel``) are identical
+    to the per-channel tap loop the entity describes.
+    """
+
+    kind = "conv1d"
+    node_cls = Conv1dNode
+    has_weights = True
+    family = "conv1d"
+    lower_model_fn = staticmethod(lower_conv_model)
+
+    @staticmethod
+    def _frames(x: jax.Array, n: Conv1dNode) -> jax.Array:
+        """(B, S, C) -> (B, out_len, kernel, C) strided tap windows — the
+        same framing the float model trains through (one implementation)."""
+        from repro.model.conv1d import conv1d_frames
+
+        return conv1d_frames(x, n.kernel, n.stride)
+
+    def prepare(self, n: Conv1dNode, graph: Graph) -> Dict:
+        K, C = n.kernel, n.channels
+        w = np.asarray(n.weight_int(), np.int32)           # (K, C)
+        w_mat = np.zeros((K * C, C), np.int32)
+        for k in range(K):
+            w_mat[k * C + np.arange(C), np.arange(C)] = w[k]
+        return {"w_mat": w_mat, "b": np.asarray(n.bias_int(), np.int32)}
+
+    def execute(self, n: Conv1dNode, env: Dict, em, mode: str) -> None:
+        x = env[n.inputs[0]].astype(jnp.int32)             # (B, S, C)
+        p = em.prepared(n.name)
+        B, t_out = x.shape[0], n.out_len
+        xh = self._frames(x, n).reshape(B * t_out, n.kernel * n.channels)
+        shift = requant_shift(n.in_fmt, n.w_fmt, n.out_fmt)
+        y = mac_int(xh, p["w_mat"], p["b"], shift=shift,
+                    fmt=n.out_fmt, mode=mode, interpret=em.interpret)
+        env[n.outputs[0]] = y.reshape(B, t_out, n.channels)
+
+    def reference(self, n: Conv1dNode, env: Dict, luts: Dict) -> None:
+        x = env[n.inputs[0]]
+        wq = ref_q(jnp.asarray(n.weight), n.w_fmt)         # (K, C)
+        bq = ref_bias(jnp.asarray(n.bias), n.in_fmt, n.w_fmt)
+        frames = self._frames(x, n)                        # (B, T, K, C)
+        z = jnp.einsum("btkc,kc->btc", frames, wq) + bq
+        env[n.outputs[0]] = ref_q(z, n.out_fmt)
+
+    def emit(self, graph: Graph, n: Conv1dNode, out: Dict[str, str]) -> None:
+        w_mem, b_mem = f"{n.name}_w.mem", f"{n.name}_b.mem"
+        out[w_mem] = T.to_hex_lines(n.weight_int(), n.w_fmt.total_bits)
+        out[b_mem] = T.to_hex_lines(n.bias_int(), 32)
+        out[f"{n.name}.vhd"] = T.CONV1D.substitute(
+            header=T.header(graph.name, n.name), name=n.name,
+            channels=n.channels, kernel=n.kernel, stride=n.stride,
+            seq_len=n.seq_len, out_len=n.out_len,
+            x_generic=T.fmt_generic("X", n.in_fmt),
+            w_generic=T.fmt_generic("W", n.w_fmt),
+            y_generic=T.fmt_generic("Y", n.out_fmt),
+            x_width=n.seq_len * n.channels * n.in_fmt.total_bits,
+            y_width=n.out_len * n.channels * n.out_fmt.total_bits,
+            macs=n.macs(), n_dsp=CONV_DSP, w_mem=w_mem, b_mem=b_mem,
+            rom_depth=int(n.weight.size), w_bits=n.w_fmt.total_bits,
+            requant_shift=requant_shift(n.in_fmt, n.w_fmt,
+                                        n.out_fmt))
+
+    def cost(self, n: Conv1dNode) -> NodeCost:
+        macs = n.macs()
+        mac_cycles = math.ceil(macs / CONV_DSP)
+        out_elems = n.out_len * n.channels
+        w_bits = n.weight.size * n.w_fmt.total_bits
+        b_bits = n.bias.size * 32
+        return NodeCost(
+            n.name, n.op,
+            cycles=mac_cycles + out_elems + PIPE,
+            active_cycles=mac_cycles + out_elems,
+            dsp=CONV_DSP, bram36=brams_for(w_bits + b_bits),
+            lut=60 + 8 * n.out_fmt.total_bits)
+
+
+class ActLUTTemplate(HWTemplate):
+    """Shared activation ROM entity: no netlist instance of its own (the
+    act_apply wiring and the LSTM cell instantiate it where used), no
+    cycles (combinational, hidden in the MAC pipeline)."""
+
+    kind = "act_lut"
+    node_cls = ActLUTNode
+    in_netlist = False
+    sequential = False
+
+    def prepare(self, n: ActLUTNode, graph: Graph) -> Dict:
+        return {"table": n.table()}
+
+    def execute(self, n: ActLUTNode, env: Dict, em, mode: str) -> None:
+        pass                                    # a ROM computes nothing alone
+
+    def reference(self, n: ActLUTNode, env: Dict, luts: Dict) -> None:
+        pass
+
+    def emit(self, graph: Graph, n: ActLUTNode, out: Dict[str, str]) -> None:
+        mem = f"{n.name}.mem"
+        out[mem] = T.to_hex_lines(n.table(), n.out_fmt.total_bits)
+        out[f"{n.name}.vhd"] = T.ACT_LUT.substitute(
+            header=T.header(graph.name, n.name), name=n.name, kind=n.kind,
+            in_bits=n.in_fmt.total_bits, out_bits=n.out_fmt.total_bits,
+            depth=n.depth, mem=mem, offset=-n.lo)
+
+    def cost(self, n: ActLUTNode) -> NodeCost:
+        rom_bits = n.depth * n.out_fmt.total_bits
+        return NodeCost(n.name, n.op, cycles=0, active_cycles=0,
+                        dsp=0, bram36=0,
+                        lut=math.ceil(rom_bits / LUT_ROM_BITS))
+
+
+class ActApplyTemplate(HWTemplate):
+    """Wiring-only application of a shared ROM: combinational lookup, part
+    of the act_lut vertical (it emits no entity of its own)."""
+
+    kind = "act_apply"
+    node_cls = ActApplyNode
+    sequential = False
+
+    def execute(self, n: ActApplyNode, env: Dict, em, mode: str) -> None:
+        env[n.outputs[0]] = em.lookup(n.lut, env[n.inputs[0]])
+
+    def reference(self, n: ActApplyNode, env: Dict, luts: Dict) -> None:
+        env[n.outputs[0]] = ref_act(luts[n.lut], env[n.inputs[0]])
+
+    def emit(self, graph: Graph, n: ActApplyNode,
+             out: Dict[str, str]) -> None:
+        pass           # instantiates the shared LUT entity in the top level
+
+    def instance(self, graph: Graph, n: ActApplyNode, *, enable: str,
+                 done: str) -> str:
+        return T.LUT_INSTANCE.substitute(
+            label=f"i_{n.name}", entity=n.lut,
+            wire_in=n.inputs[0], wire_out=n.outputs[0])
+
+    def cost(self, n: ActApplyNode) -> NodeCost:
+        return NodeCost(n.name, n.op, cycles=1, active_cycles=1,
+                        dsp=0, bram36=0, lut=4)
+
+
+class ElementwiseTemplate(HWTemplate):
+    """out = requant(a (mul|add) b) on one DSP slice."""
+
+    kind = "elementwise"
+    node_cls = ElementwiseNode
+
+    def execute(self, n, env: Dict, em, mode: str) -> None:
+        a = env[n.inputs[0]].astype(jnp.int32)
+        b = env[n.inputs[1]].astype(jnp.int32)
+        fa, fb = n.a_fmt.frac_bits, n.b_fmt.frac_bits
+        if n.kind == "mul":
+            y = fxp_requant_int(a * b, fa + fb, n.out_fmt)
+        else:
+            hi = max(fa, fb)
+            a = jax.lax.shift_left(a, hi - fa)
+            b = jax.lax.shift_left(b, hi - fb)
+            y = fxp_requant_int(a + b, hi, n.out_fmt)
+        env[n.outputs[0]] = y
+
+    def reference(self, n, env: Dict, luts: Dict) -> None:
+        a, b = env[n.inputs[0]], env[n.inputs[1]]
+        v = a * b if n.kind == "mul" else a + b
+        env[n.outputs[0]] = ref_q(v, n.out_fmt)
+
+    def emit(self, graph: Graph, n, out: Dict[str, str]) -> None:
+        out[f"{n.name}.vhd"] = T.ELEMENTWISE.substitute(
+            header=T.header(graph.name, n.name), name=n.name,
+            a_generic=T.fmt_generic("A", n.a_fmt),
+            b_generic=T.fmt_generic("B", n.b_fmt),
+            y_generic=T.fmt_generic("Y", n.out_fmt),
+            a_width=graph.edges[n.inputs[0]].bits,
+            b_width=graph.edges[n.inputs[1]].bits,
+            y_width=graph.edges[n.outputs[0]].bits,
+            op_sym="*" if n.kind == "mul" else "+")
+
+    def instance(self, graph: Graph, n, *, enable: str, done: str) -> str:
+        return T.EW_INSTANCE.substitute(
+            label=f"i_{n.name}", entity=n.name, enable=enable,
+            wire_a=n.inputs[0], wire_b=n.inputs[1],
+            wire_out=n.outputs[0], done=done)
+
+    def cost(self, n) -> NodeCost:
+        return NodeCost(n.name, n.op, cycles=1 + PIPE,
+                        active_cycles=1, dsp=1, bram36=0, lut=16)
+
+
+register_template(LinearTemplate())
+register_template(LSTMCellTemplate())
+register_template(Conv1dTemplate())
+register_template(ActLUTTemplate())
+register_template(ActApplyTemplate())
+register_template(ElementwiseTemplate())

@@ -8,6 +8,12 @@ time-multiplexes its window over ``LSTM_DSP`` MAC units, paying a state
 update + pipeline refill per step. Power is duty-cycled through
 :meth:`HWSpec.energy_j` — MAC/elementwise cycles at ``active_w``, pipeline
 fill at ``idle_w`` (DESIGN.md §5–§6).
+
+Since the op-library redesign (DESIGN.md §9) the per-op cost formulas live on
+each :class:`~repro.rtl.oplib.HWTemplate`; this module owns the shared
+schedule constants, the :class:`NodeCost`/:class:`ResourceReport` datatypes,
+and the graph-level ``estimate``/``synthesize`` roll-ups. ``node_cost`` is a
+registry dispatch.
 """
 from __future__ import annotations
 
@@ -17,12 +23,12 @@ from typing import Dict, List
 
 from repro.energy.hw import HWSpec, XC7S15
 from repro.core.report import SynthesisReport
-from repro.rtl.ir import (ActLUTNode, ActApplyNode, ElementwiseNode, Graph,
-                          LinearNode, LSTMCellNode)
+from repro.rtl.ir import Graph, Node
 
 # Template schedule constants (one-time calibration vs ref [11], DESIGN.md §5)
 LSTM_DSP = 2          # MAC units the gate-fused cell template instantiates
 LINEAR_DSP = 1        # serial-MAC linear template
+CONV_DSP = 1          # serial tap-MAC conv1d template (one DSP, BRAM taps)
 PIPE = 8              # pipeline fill/drain cycles per template invocation
 BRAM36_BITS = 36 * 1024
 LUT_ROM_BITS = 64     # one LUT6 stores 64 bits of distributed ROM
@@ -91,49 +97,16 @@ class ResourceReport:
         return all(v <= 1.0 for v in self.utilization().values())
 
 
-def _brams(bits: int) -> int:
+def brams_for(bits: int) -> int:
+    """BRAM36 blocks needed for ``bits`` of weight/bias storage."""
     return max(1, math.ceil(bits / BRAM36_BITS)) if bits else 0
 
 
-def node_cost(node) -> NodeCost:
-    if isinstance(node, LSTMCellNode):
-        per_step_macs = (node.d_in + node.hidden) * 4 * node.hidden
-        mac_cycles = math.ceil(per_step_macs / LSTM_DSP)
-        # elementwise state update: 4 DSP ops per hidden unit, 1/cycle each
-        # on the same MAC units -> hidden cycles; + pipeline refill
-        step = mac_cycles + node.hidden + PIPE
-        w_bits = node.weight.size * node.w_fmt.total_bits
-        b_bits = node.bias.size * 32
-        return NodeCost(
-            node.name, node.op,
-            cycles=node.seq_len * step,
-            active_cycles=node.seq_len * (mac_cycles + node.hidden),
-            dsp=LSTM_DSP, bram36=_brams(w_bits + b_bits),
-            lut=150 + 12 * node.act_fmt.total_bits)
-    if isinstance(node, LinearNode):
-        macs = node.macs()
-        mac_cycles = math.ceil(macs / LINEAR_DSP)
-        out = node.weight.shape[1]
-        w_bits = node.weight.size * node.w_fmt.total_bits
-        b_bits = node.bias.size * 32
-        return NodeCost(
-            node.name, node.op,
-            cycles=mac_cycles + out + PIPE,
-            active_cycles=mac_cycles + out,
-            dsp=LINEAR_DSP, bram36=_brams(w_bits + b_bits),
-            lut=60 + 8 * node.out_fmt.total_bits)
-    if isinstance(node, ActLUTNode):
-        rom_bits = node.depth * node.out_fmt.total_bits
-        return NodeCost(node.name, node.op, cycles=0, active_cycles=0,
-                        dsp=0, bram36=0,
-                        lut=math.ceil(rom_bits / LUT_ROM_BITS))
-    if isinstance(node, ActApplyNode):
-        return NodeCost(node.name, node.op, cycles=1, active_cycles=1,
-                        dsp=0, bram36=0, lut=4)
-    if isinstance(node, ElementwiseNode):
-        return NodeCost(node.name, node.op, cycles=1 + PIPE,
-                        active_cycles=1, dsp=1, bram36=0, lut=16)
-    return NodeCost.zero(node.name, node.op)
+def node_cost(node: Node) -> NodeCost:
+    """Registry dispatch: the node's template owns its cost formula."""
+    from repro.rtl.oplib import get_template
+
+    return get_template(node.op).cost(node)
 
 
 def estimate(graph: Graph, *, clock_hz: float = 100e6) -> ResourceReport:

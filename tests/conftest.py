@@ -33,6 +33,14 @@ def make_batch(cfg, B, S, key=0, train=True):
         c = cfg.lstm
         x = jax.random.normal(k0, (B, c.seq_len, c.in_features))
         return {"x": x, "y": x.mean(axis=1) * 0.8}
+    if cfg.family == "conv1d":
+        import jax.numpy as jnp
+
+        c = cfg.conv1d
+        x = jax.random.normal(k0, (B, c.seq_len, c.channels))
+        y = jnp.repeat(x.mean(axis=(1, 2))[:, None] * 0.8,
+                       c.out_features, axis=1)            # (B, out_features)
+        return {"x": x, "y": y}
     tokens = jax.random.randint(k0, (B, S), 0, cfg.vocab_size)
     batch = {"tokens": tokens}
     if train:

@@ -9,6 +9,9 @@ from repro.core.types import SMOKE_MESH, ShapeConfig
 from repro.model.lm import Stepper, make_prefill_step
 
 
+WINDOW_FAMILIES = ("elastic-lstm", "elastic-conv1d")   # x/y window archs
+
+
 @pytest.mark.parametrize("arch", ALL_IDS)
 def test_train_step(arch, par_f32):
     cfg = get_config(arch, smoke=True)
@@ -29,7 +32,8 @@ def test_train_step(arch, par_f32):
     assert int(o2["step"]) == 1
 
 
-@pytest.mark.parametrize("arch", [a for a in ALL_IDS if a != "elastic-lstm"])
+@pytest.mark.parametrize("arch",
+                         [a for a in ALL_IDS if a not in WINDOW_FAMILIES])
 def test_forward_shapes(arch, par_f32):
     cfg = get_config(arch, smoke=True)
     B, S = 2, 16

@@ -10,7 +10,7 @@ from repro.core.types import SMOKE_MESH, ShapeConfig
 from repro.model.lm import Stepper, make_decode_step, make_prefill_step
 from repro.model.transformer import pad_cache
 
-ARCHS = [a for a in ALL_IDS if a != "elastic-lstm"]
+ARCHS = [a for a in ALL_IDS if a not in ("elastic-lstm", "elastic-conv1d")]
 
 
 @pytest.mark.parametrize("arch", ARCHS)

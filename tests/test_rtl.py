@@ -15,16 +15,25 @@ except ImportError:                       # image lacks hypothesis: use shim
 
 from repro.configs import get_config
 from repro.core.creator import Creator
-from repro.core.types import SHAPES_LSTM
+from repro.core.types import SHAPES_CONV1D, SHAPES_LSTM
 from repro.energy.hw import XC7S15
 from repro.model.layers import init_params
 from repro.model.lstm import lstm_flops, lstm_schema
 from repro.quant.fixedpoint import FxpFormat, fxp_requant_int, fxp_quantize
-from repro.rtl import (ActLUTNode, ElementwiseNode, Graph, Edge,
-                       RTLEmulator, RTLOptions, assert_bit_exact,
-                       emit_graph, estimate, lower_linear_stack,
-                       lower_model, reference_apply, synthesize,
+from repro.rtl import (ActLUTNode, Conv1dNode, ElementwiseNode, Graph, Edge,
+                       LinearNode, LSTMCellNode, RTLEmulator, RTLOptions,
+                       assert_bit_exact, emit_graph, estimate,
+                       lower_conv_stack, lower_linear_stack, lower_model,
+                       node_cost, reference_apply, synthesize,
                        validate_formats)
+
+
+def _conv_graph(**fmts):
+    from repro.model.conv1d import conv1d_schema
+
+    cfg = get_config("elastic-conv1d")
+    params = init_params(conv1d_schema(cfg), jax.random.PRNGKey(0))
+    return lower_model(cfg, params, **fmts), cfg, params
 
 
 def _lstm_graph(n_layers: int = 1, **fmts):
@@ -381,3 +390,338 @@ def test_rtl_executable_save(tmp_path):
     files = list(tmp_path.iterdir())
     assert len(files) == len(exe.artifacts)
     assert exe.cycles > 0
+
+
+# --------------------------------------------------------------------------- #
+# IR construction safety: array fields are required, shape-checked at build
+# --------------------------------------------------------------------------- #
+
+
+def test_nodes_reject_missing_arrays():
+    with pytest.raises(TypeError, match="weight.*required"):
+        LinearNode(name="l", op="linear", inputs=["x"], outputs=["y"],
+                   weight=None, bias=np.zeros(4, np.float32))
+    with pytest.raises(TypeError, match="bias.*required"):
+        LSTMCellNode(name="c", op="lstm_cell", inputs=["x"], outputs=["h"],
+                     weight=np.zeros((21, 80), np.float32), bias=None)
+    with pytest.raises(TypeError):
+        LinearNode(name="l", op="linear", inputs=["x"], outputs=["y"])  # noqa
+
+
+def test_nodes_reject_shape_mismatch():
+    with pytest.raises(ValueError, match="bias shape"):
+        LinearNode(name="l", op="linear", inputs=["x"], outputs=["y"],
+                   weight=np.zeros((4, 8), np.float32),
+                   bias=np.zeros(4, np.float32))
+    with pytest.raises(ValueError, match="weight shape"):
+        LSTMCellNode(name="c", op="lstm_cell", inputs=["x"], outputs=["h"],
+                     weight=np.zeros((10, 80), np.float32),
+                     bias=np.zeros(80, np.float32), d_in=1, hidden=20)
+    with pytest.raises(ValueError, match="out_len"):
+        Conv1dNode(name="cv", op="conv1d", inputs=["x"], outputs=["y"],
+                   weight=np.zeros((5, 2), np.float32),
+                   bias=np.zeros(2, np.float32), kernel=5, stride=1,
+                   seq_len=4, channels=2)
+
+
+# --------------------------------------------------------------------------- #
+# Golden artifacts: emission is deterministic and pinned to a snapshot
+# --------------------------------------------------------------------------- #
+
+
+def test_emit_graph_deterministic():
+    """Emitting the same lowered graph twice yields byte-identical dicts."""
+    g = _lstm_graph()
+    a1, a2 = emit_graph(g), emit_graph(g)
+    assert sorted(a1) == sorted(a2)
+    for name in a1:
+        assert a1[name] == a2[name], f"{name} differs between emissions"
+    gc, _, _ = _conv_graph()
+    b1, b2 = emit_graph(gc), emit_graph(gc)
+    assert b1 == b2
+
+
+def test_elastic_lstm_manifest_matches_golden():
+    """The reference design's manifest is pinned: codegen drift (formats,
+    cycle model, node set) must be an intentional, reviewed change. The
+    manifest depends only on the config (shapes/Q-formats/cost model), not
+    on trained weights, so the snapshot is platform-stable."""
+    import os
+
+    g = _lstm_graph()
+    got = emit_graph(g)["manifest.json"]
+    golden = os.path.join(os.path.dirname(__file__), "golden",
+                          "elastic_lstm_manifest.json")
+    with open(golden) as f:
+        want = f.read()
+    assert got == want, (
+        "manifest.json drifted from tests/golden/elastic_lstm_manifest.json"
+        " — if the change is intentional, regenerate the snapshot")
+
+
+# --------------------------------------------------------------------------- #
+# Hardware-template (op) registry
+# --------------------------------------------------------------------------- #
+
+
+def test_template_registry_lists_and_resolves():
+    from repro.rtl import get_template, list_templates
+
+    kinds = list_templates()
+    for kind in ("linear", "lstm_cell", "conv1d", "act_lut", "act_apply",
+                 "elementwise"):
+        assert kind in kinds
+        assert get_template(kind).kind == kind
+
+
+def test_template_registry_unknown_kind_lists_registered():
+    from repro.rtl import get_template
+
+    with pytest.raises(ValueError) as ei:
+        get_template("systolic_gemm")
+    msg = str(ei.value)
+    assert "systolic_gemm" in msg and "lstm_cell" in msg and "conv1d" in msg
+
+
+def test_template_registry_double_registration_policy():
+    from repro.rtl import get_template, register_template
+    from repro.rtl.oplib import HWTemplate
+
+    class Dup(HWTemplate):
+        kind = "linear"
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_template(Dup())
+    orig = get_template("linear")
+    register_template(Dup(), overwrite=True)      # explicit swap is allowed
+    try:
+        assert isinstance(get_template("linear"), Dup)
+    finally:
+        register_template(orig, overwrite=True)
+
+
+def test_unknown_family_error_lists_lowerable():
+    from repro.rtl.oplib import lowering_for
+
+    with pytest.raises(NotImplementedError) as ei:
+        lowering_for("dense")
+    assert "conv1d" in str(ei.value) and "lstm" in str(ei.value)
+
+
+def test_custom_template_round_trips():
+    """A minimal in-test template: lower -> emit -> emulate -> cost, without
+    touching any repro internals — the plugin contract of DESIGN.md §9."""
+    from dataclasses import dataclass as dc
+
+    from repro.rtl import (HWTemplate, get_template, register_template,
+                           unregister_template)
+    from repro.rtl.ir import Node
+    from repro.rtl.resources import NodeCost
+
+    @dc
+    class NegNode(Node):
+        fmt: FxpFormat = FxpFormat(8, 4)
+
+    class NegTemplate(HWTemplate):
+        """y = -x: one adder, no memories."""
+
+        kind = "negate"
+        node_cls = NegNode
+
+        def execute(self, n, env, em, mode):
+            env[n.outputs[0]] = jnp.clip(-env[n.inputs[0]],
+                                         n.fmt.lo, n.fmt.hi)
+
+        def reference(self, n, env, luts):
+            env[n.outputs[0]] = fxp_quantize(-env[n.inputs[0]], n.fmt)
+
+        def emit(self, graph, n, out):
+            out[f"{n.name}.vhd"] = (f"entity {n.name} is\n"
+                                    f"-- y <= -x\nend entity {n.name};\n")
+
+        def cost(self, n):
+            return NodeCost(n.name, n.op, cycles=1, active_cycles=1,
+                            dsp=0, bram36=0, lut=8)
+
+    register_template(NegTemplate())
+    try:
+        fmt = FxpFormat(8, 4)
+        g = Graph(name="neg_demo")
+        g.edges["x"] = Edge("x", (6,), fmt)
+        g.inputs = ["x"]
+        g.add(NegNode(name="neg0", op="negate", inputs=["x"],
+                      outputs=["y"], fmt=fmt), Edge("y", (6,), fmt))
+        g.outputs = ["y"]
+        x = jax.random.normal(jax.random.PRNGKey(7), (3, 6))
+        assert_bit_exact(g, x, mode="jnp")            # emulate == reference
+        arts = emit_graph(g)                          # emit walks the plugin
+        assert "neg0.vhd" in arts and "neg_demo.vhd" in arts
+        assert "i_neg0 : entity work.neg0" in arts["neg_demo.vhd"]
+        rr = estimate(g)                              # cost walks the plugin
+        assert rr.cycles == 1 and rr.lut == 8
+        assert get_template("negate").kind == "negate"
+    finally:
+        unregister_template("negate")
+
+
+# --------------------------------------------------------------------------- #
+# conv1d template: bit-exact, deployable end-to-end, costed
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("mode", ["fused", "pallas", "jnp"])
+@pytest.mark.parametrize("batch", [1, 5])
+def test_conv1d_bit_exact_all_paths(mode, batch):
+    g, cfg, _ = _conv_graph()
+    c = cfg.conv1d
+    x = jax.random.normal(jax.random.PRNGKey(3 * batch),
+                          (batch, c.seq_len, c.channels)) * 2.0
+    assert_bit_exact(g, x, mode=mode)
+
+
+def test_conv1d_stack_strides_and_kernels_bit_exact():
+    k = jax.random.PRNGKey(11)
+    for kernel, stride, seq in [(2, 1, 8), (3, 2, 16), (4, 3, 15)]:
+        C = 2
+        t1 = (seq - kernel) // stride + 1
+        t2 = (t1 - kernel) // stride + 1
+        if t2 < 1:
+            continue
+        blocks = [(np.asarray(jax.random.normal(
+            jax.random.PRNGKey(kernel * 10 + stride + i),
+            (kernel, C))) * 0.5, np.full(C, 0.05, np.float32))
+            for i in range(2)]
+        head = (np.asarray(jax.random.normal(k, (t2 * C, 2))) * 0.4,
+                np.zeros(2, np.float32))
+        g = lower_conv_stack(f"c{kernel}{stride}", blocks, head,
+                             seq_len=seq, stride=stride)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, seq, C))
+        assert_bit_exact(g, x, mode="jnp")
+        assert_bit_exact(g, x, mode="fused")
+
+
+def test_conv_stack_envelope_uses_widest_kernel():
+    """A later block's bigger kernel must count toward the §4 fan-in."""
+    C = 2
+    blocks = [(np.zeros((2, C), np.float32), np.zeros(C, np.float32)),
+              (np.zeros((200, C), np.float32), np.zeros(C, np.float32))]
+    head = (np.zeros((1 * C, 1), np.float32), np.zeros(1, np.float32))
+    with pytest.raises(ValueError, match="envelope"):
+        lower_conv_stack("wide", blocks, head, seq_len=256, stride=1,
+                         w_fmt=FxpFormat(12, 8), act_fmt=FxpFormat(9, 4))
+
+
+def test_conv1d_artifacts_and_netlist():
+    import re
+
+    g, _, _ = _conv_graph()
+    arts = emit_graph(g)
+    assert "conv1d_0.vhd" in arts and "conv1d_0_w.mem" in arts
+    vhd = arts["conv1d_0.vhd"]
+    assert "entity conv1d_0" in vhd
+    assert "conv1d_0_w.mem" in vhd and 'rom_style' in vhd   # BRAM taps
+    assert "STRIDE" in vhd and "KERNEL" in vhd
+    # tap .mem round-trips to the fxp_to_int codes
+    node = g.node("conv1d_0")
+    lines = arts["conv1d_0_w.mem"].splitlines()
+    codes = node.weight_int().reshape(-1)
+    assert len(lines) == codes.size
+    # every instantiated entity resolves
+    top = arts[f"{g.name}.vhd"]
+    refs = set(re.findall(r"entity work\.(\w+)", top))
+    ents = {m for a in arts.values()
+            for m in re.findall(r"^entity (\w+) is", a, re.M)}
+    assert refs <= ents, refs - ents
+
+
+def test_conv1d_cost_model():
+    g, _, _ = _conv_graph()
+    n = g.node("conv1d_0")
+    c = node_cost(n)
+    assert c.dsp >= 1 and c.bram36 >= 1
+    assert c.cycles > c.active_cycles > 0
+    assert c.active_cycles == n.macs() + n.out_len * n.channels
+    rr = estimate(g)
+    assert rr.fits() and rr.cycles > 0
+    syn = synthesize(g, hw=XC7S15)
+    assert syn.fits and syn.est_latency_s < 57.25e-6   # lighter than Table I
+
+
+def test_conv1d_end_to_end_deployment(tmp_path):
+    """Creator.translate(target="rtl") -> Deployment.measure -> .save."""
+    from repro.model.conv1d import conv1d_flops
+
+    cfg = get_config("elastic-conv1d")
+    cr = Creator(hw=XC7S15)
+    st_ = cr.build(cfg, SHAPES_CONV1D["infer_1"])
+    syn, dep = cr.translate(st_, target="rtl")
+    assert syn.backend == "rtl" and syn.fits
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (2, cfg.conv1d.seq_len, cfg.conv1d.channels))
+    y = dep(x)
+    assert y.shape == (2, cfg.conv1d.out_features)
+    meas = dep.measure((x,), model=cfg.name,
+                       model_flops=float(conv1d_flops(cfg)), n_runs=2)
+    assert meas.target == "rtl" and meas.latency_s > 0
+    dep.save(str(tmp_path))
+    assert len(list(tmp_path.iterdir())) == len(dep.artifacts)
+
+
+def test_workflow_roundtrip_target_rtl_conv1d():
+    """The same single run_once path drives the conv1d arch."""
+    from repro.core.report import DesignReport
+    from repro.core.workflow import Requirement, Workflow
+    from repro.model.conv1d import conv1d_apply, conv1d_flops, conv1d_schema
+
+    cfg = get_config("elastic-conv1d")
+
+    def train_fn(knobs):
+        params = init_params(conv1d_schema(cfg), jax.random.PRNGKey(0))
+        rep = DesignReport(model=cfg.name, train_loss=0.0, eval_loss=0.0,
+                           weight_fmt=str(FxpFormat(knobs["bits"],
+                                                    knobs["bits"] - 2)))
+        return params, rep, None
+
+    def step_builder(knobs, params):
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, cfg.conv1d.seq_len, cfg.conv1d.channels))
+        return ((lambda p, xx: conv1d_apply(p, xx, cfg)[0]), (params, x),
+                float(conv1d_flops(cfg)))
+
+    def stepper_builder(knobs):
+        return Creator(hw=XC7S15).build(cfg, SHAPES_CONV1D["infer_1"])
+
+    wf = Workflow(creator=Creator(hw=XC7S15), train_fn=train_fn,
+                  step_builder=step_builder, stepper_builder=stepper_builder,
+                  target="rtl")
+    hist = wf.run(Requirement(max_latency_s=1.0), lambda h: None,
+                  {"bits": 8}, max_iters=2)
+    assert len(hist) == 1 and hist[0].satisfied
+    rec = hist[0]
+    assert rec.synthesis.backend == "rtl"
+    assert rec.measurement.platform.startswith("rtl-emulator")
+    assert rec.measurement.target == "rtl"
+
+
+def test_rtl_options_w_fmt_overrides():
+    opts = RTLOptions(w_fmt_overrides={"conv1d": FxpFormat(6, 4)})
+    assert opts.w_fmt_overrides["conv1d"] == FxpFormat(6, 4)
+    with pytest.raises(ValueError, match="unknown hardware template"):
+        RTLOptions(w_fmt_overrides={"cnv1d": FxpFormat(6, 4)})
+    with pytest.raises(TypeError, match="FxpFormat"):
+        RTLOptions(w_fmt_overrides={"conv1d": (6, 4)})
+    # weightless kinds are rejected, not silently ignored
+    with pytest.raises(ValueError, match="carries no weight format"):
+        RTLOptions(w_fmt_overrides={"act_lut": FxpFormat(6, 4)})
+    # an override for a kind ABSENT from the model must not widen (or
+    # reject via) that model's envelope check — shared sweep dicts work
+    g_lstm = _lstm_graph(w_fmt_overrides={"conv1d": FxpFormat(14, 10)})
+    assert g_lstm.node("lstm_cell_l0").w_fmt == FxpFormat(8, 6)
+    # overrides reach the lowered nodes (and stay bit-exact)
+    g, cfg, params = _conv_graph(
+        w_fmt_overrides={"conv1d": FxpFormat(6, 4)})
+    assert g.node("conv1d_0").w_fmt == FxpFormat(6, 4)
+    assert g.node("linear_head").w_fmt == FxpFormat(8, 6)   # default kept
+    x = jax.random.normal(jax.random.PRNGKey(2),
+                          (2, cfg.conv1d.seq_len, cfg.conv1d.channels))
+    assert_bit_exact(g, x, mode="jnp")
