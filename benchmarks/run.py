@@ -92,6 +92,24 @@ def main() -> None:
                  f"cycles={_csyn.resources['cycles']}_"
                  f"fits={_csyn.fits}"))
 
+    # Elastic Node conformance stage: full differential verify per arch
+    print()
+    print("=" * 72)
+    print("Conformance (verify stage): differential modes + oracle + protocol")
+    print("=" * 72)
+    from repro.verify import run_conformance
+
+    for _name, _e in (("elastic-lstm", _exe), ("elastic-conv1d", _cexe)):
+        t0 = time.time()
+        _rep = run_conformance(_e.graph)
+        _conf_us = (time.time() - t0) * 1e6
+        print(f"{_name}: {_rep.summary()}  ({_conf_us/1e3:.0f} ms)")
+        rows.append((f"verify_{_name.split('-')[1]}", _conf_us,
+                     f"passed={_rep.passed}_modes_exact="
+                     f"{_rep.modes_bit_exact}_oracle_lsb="
+                     f"{_rep.oracle_max_lsb:g}_budget="
+                     f"{_rep.error_budget_lsb}_vectors={_rep.n_vectors}"))
+
     print()
     print("=" * 72)
     print("RTL-template vs HLS analogue (Pallas templates vs plain XLA)")

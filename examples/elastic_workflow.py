@@ -180,6 +180,12 @@ def main():
     ap.add_argument("--build-dir", default=None,
                     help="write the final RTL artifact bundle here "
                          "(<build-dir>/<arch>/)")
+    ap.add_argument("--verify", action="store_true",
+                    help="run the Elastic Node conformance stage: "
+                         "Deployment.verify after every loop measurement, "
+                         "plus a full differential check + golden vectors "
+                         "for the final RTL design (reports land in "
+                         "<build-dir>/<arch>/ when given)")
     args = ap.parse_args()
     target = args.target
     arch = ARCH_ALIASES.get(args.arch, args.arch)
@@ -200,19 +206,22 @@ def main():
     wf = Workflow(creator=creator, train_fn=train_fn,
                   step_builder=step_builder, target=target,
                   stepper_builder=stepper_builder if target == "rtl"
-                  else None)
+                  else None, verify=args.verify)
     req = Requirement(max_eval_loss=0.01, max_latency_s=1.0)
     hist = wf.run(req, optimizer, {"bits": 4, "frac": 2},
                   max_iters=args.max_iters)
     print(f"\n{'it':>3} {'fmt':>7} {'eval':>8} {'est_ms':>8} {'meas_ms':>8} "
-          f"{'est_uJ':>8} {'GOP/J':>7} {'ok':>3}")
+          f"{'est_uJ':>8} {'GOP/J':>7} {'vrfy':>4} {'ok':>3}")
     for r in hist:
+        vrfy = "-" if r.conformance is None else \
+            ("Y" if r.conformance.passed else "FAIL")
         print(f"{r.iteration:>3} {r.design.weight_fmt:>7} "
               f"{r.design.eval_loss:8.4f} "
               f"{r.synthesis.est_latency_s*1e3:8.3f} "
               f"{r.measurement.latency_s*1e3:8.3f} "
               f"{r.synthesis.est_energy_j*1e6:8.2f} "
               f"{r.measurement.gop_per_j:7.2f} "
+              f"{vrfy:>4} "
               f"{'Y' if r.satisfied else 'n':>3}")
     print("\nworkflow finished:",
           "requirement met" if hist[-1].satisfied else "budget exhausted")
@@ -233,12 +242,36 @@ def main():
           f"lut={syn.resources['lut']}, fits={syn.fits}")
     for name in sorted(dep.artifacts):
         print(f"  - {name}")
+    out = None
     if args.build_dir:
         import os
 
         out = os.path.join(args.build_dir, arch)
         dep.save(out)
         print(f"artifact bundle written to {out}/")
+
+    # --- Elastic Node conformance of the final design -------------------- #
+    if args.verify:
+        from repro.model.conv1d import conv1d_flops
+        from repro.model.lstm import lstm_flops
+        from repro.verify import generate_vectors, save_vectors
+
+        flops = float(lstm_flops(cfg) if cfg.family == "lstm"
+                      else conv1d_flops(cfg))
+        rep = dep.verify(model=cfg.name, model_flops=flops)
+        print(f"\nconformance: {rep.summary()}")
+        for note in rep.notes:
+            print(f"  note: {note}")
+        if out is not None:
+            import os
+
+            with open(os.path.join(out, "conformance.json"), "w") as f:
+                f.write(rep.to_json())
+            save_vectors(generate_vectors(dep.graph),
+                         os.path.join(out, "vectors"))
+            print(f"ConformanceReport + golden vectors written to {out}/")
+        if not rep.passed:
+            raise SystemExit("conformance FAILED — see report above")
 
 
 if __name__ == "__main__":

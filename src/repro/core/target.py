@@ -151,6 +151,28 @@ class Deployment:
     def save(self, build_dir: str) -> None:
         raise NotImplementedError
 
+    def verify(self, args=None, *, model: str, model_flops: float,
+               hw: Optional[HWSpec] = None, protocol=None, oracle=None):
+        """Elastic Node conformance: run this deployment through the
+        verification subsystem (:mod:`repro.verify`) and return its
+        :class:`~repro.verify.ConformanceReport`.
+
+        Part of the uniform Deployment contract, like :meth:`measure`:
+        self-executing targets (RTL) get the full differential check —
+        every emulator mode mutually bit-exact over the design's golden
+        vectors, int output within the error budget of the float oracle —
+        plus the measurement protocol (warmup, ``n_runs``, latency/energy
+        bands vs the XC7S15 model and Table I); host-executed targets get
+        the protocol plus an ``oracle`` comparison when one is supplied.
+        ``args`` follows the :meth:`measure` convention and may be omitted
+        for self-executing targets (the golden stimulus stands in).
+        """
+        from repro.verify import verify_deployment
+
+        return verify_deployment(self, args, model=model,
+                                 model_flops=model_flops, hw=hw,
+                                 protocol=protocol, oracle=oracle)
+
 
 @dataclass
 class XLADeployment(Deployment):

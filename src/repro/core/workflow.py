@@ -60,6 +60,8 @@ class WorkflowRecord:
     measurement: MeasurementReport
     est_vs_meas: Dict[str, float]
     satisfied: bool
+    #: ConformanceReport from the verify stage (None when verify=False)
+    conformance: Optional[Any] = None
 
 
 @dataclass
@@ -83,6 +85,9 @@ class Workflow:
     target: str = "xla"
     options_from_knobs: Optional[
         Callable[[Dict[str, Any]], TargetOptions]] = None
+    #: run the Elastic Node conformance stage (Deployment.verify) after
+    #: every stage-3 measurement and attach its report to the record
+    verify: bool = False
     # deprecated spellings (forwarded in __post_init__):
     backend: Optional[str] = None
     fmt_builder: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None
@@ -139,10 +144,17 @@ class Workflow:
         dep = dep.bind_step(jax.jit(fn)) if fn is not None else dep
         meas = dep.measure(args, model=design.model,
                            model_flops=model_flops)
+        # Verify stage — the Elastic Node half of the paper's loop: the
+        # same uniform Deployment API, so every target is conformance-
+        # checked the same way the reference design is.
+        conf = None
+        if self.verify:
+            conf = dep.verify(args, model=design.model,
+                              model_flops=model_flops)
         rec = WorkflowRecord(
             iteration=it, knobs=dict(knobs), design=design, synthesis=syn,
             measurement=meas, est_vs_meas=compare(syn, meas),
-            satisfied=False)
+            satisfied=False, conformance=conf)
         self.history.append(rec)
         return rec
 

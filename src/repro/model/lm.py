@@ -153,7 +153,23 @@ def make_train_step(cfg: ModelConfig, mesh_cfg: MeshConfig,
 
 def make_prefill_step(cfg: ModelConfig, mesh_cfg: MeshConfig,
                       par: ParallelismConfig, mesh: Optional[Mesh] = None):
-    """(params, batch) -> (last_logits (B,V), cache)."""
+    """(params, batch) -> (last_logits (B,V), cache).
+
+    For the window families (lstm/conv1d) "prefill" is one window
+    inference: (params, batch) -> (pred (B, out_features), state) — the
+    deployable step the XLA target translates for ``infer_1`` shapes,
+    mirroring what the RTL target lowers.
+    """
+    if cfg.family in ("lstm", "conv1d"):
+        if cfg.family == "lstm":
+            from repro.model.lstm import lstm_apply as apply_fn
+        else:
+            from repro.model.conv1d import conv1d_apply as apply_fn
+
+        def window_step(params, batch):
+            return apply_fn(params, batch["x"], cfg)
+
+        return window_step
 
     def step(params, batch):
         ctx = _mk_ctx(cfg, mesh_cfg, "prefill", mesh, par)

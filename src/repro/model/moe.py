@@ -27,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.types import ModelConfig
 from repro.model.layers import Ctx, PSpec, shard_axis
+from repro.shardmap import pvary, shard_map
 
 
 def moe_schema(cfg: ModelConfig, tp: int = 16):
@@ -153,10 +154,10 @@ def moe_psum(p, x: jax.Array, cfg: ModelConfig, ctx: Ctx):
         # aux is value-identical across model shards (router inputs are
         # replicated); mark it varying then mean so the VMA checker can
         # prove the P() out_spec
-        aux = jax.lax.pmean(jax.lax.pvary(aux, ("model",)), dp + ("model",))
+        aux = jax.lax.pmean(pvary(aux, ("model",)), dp + ("model",))
         return y.reshape(xt.shape).astype(xt.dtype), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(dp, None, None), P(), P("model", None, None),
@@ -233,7 +234,7 @@ def moe_a2a(p, x: jax.Array, cfg: ModelConfig, ctx: Ctx):
         aux = jax.lax.pmean(aux, dp + ("model",))
         return y.reshape(xt.shape).astype(xt.dtype), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(dp, None, None), P(), P("model", None, None),

@@ -21,6 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.shardmap import (PARTIAL_AUTO_PPERMUTE_OK, axis_size,
+                            shard_map)
+
 
 def _quant(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / 127.0
@@ -34,7 +37,7 @@ def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
 
 def compressed_psum_vec(x: jax.Array, axis: str) -> jax.Array:
     """int8 ring all-reduce of a flat f32 vector inside a manual region."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis)
@@ -103,7 +106,7 @@ def compressed_psum_butterfly(x: jax.Array, axis: str) -> jax.Array:
     log2(n)·size·1 B vs ~8·size for the f32 ring (≈2× for n=16, and the
     payload dtype drops 4× on the slow axis).
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     if n == 1:
         return x
     acc = x.astype(jnp.float32)
@@ -122,6 +125,30 @@ def compressed_psum_tree_butterfly(tree: Any, axis: str) -> Any:
     return jax.tree.map(lambda g: compressed_psum_butterfly(g, axis), tree)
 
 
+def compressed_psum_local_quant(x: jax.Array, axis: str) -> jax.Array:
+    """Quantization numerics of the int8 all-reduce, via a plain psum.
+
+    Each shard rounds its contribution through the same int8 codes the
+    butterfly would put on the wire, then the dequantized values are
+    psum-reduced — sum_i scale_i·q_i, bit-identical to gathering the int8
+    payloads and summing locally. What training *sees* is therefore the
+    compressed gradient; what the wire carries on this path is f32, because
+    jaxlib 0.4.x's SPMD partitioner hard-aborts on ``ppermute``/``all_gather``
+    inside a *partially-manual* region and only all-reduce collectives
+    survive (``repro.shardmap.PARTIAL_AUTO_PPERMUTE_OK``). The wire-byte
+    claim itself is measured on the fully-manual path, which keeps the real
+    butterfly on every jax.
+    """
+    if axis_size(axis) == 1:
+        return x
+    q, sc = _quant(x)
+    return jax.lax.psum(_dequant(q, sc), axis)
+
+
+def compressed_psum_tree_local_quant(tree: Any, axis: str) -> Any:
+    return jax.tree.map(lambda g: compressed_psum_local_quant(g, axis), tree)
+
+
 def make_compressed_grad_fn(loss_fn, mesh, mesh_cfg, batch_pspec_tree):
     """Wrap value_and_grad in a partially-manual shard_map:
     manual over the DP axes (batch split, compressed grad reduction),
@@ -135,15 +162,20 @@ def make_compressed_grad_fn(loss_fn, mesh, mesh_cfg, batch_pspec_tree):
         # butterfly over the slowest (outermost) axis. Butterfly (not ring):
         # it preserves each leaf's TP sharding — the flat ring was measured
         # to induce model-axis all-gathers (EXPERIMENTS.md §Perf cell C).
+        # Where the partitioner can't take ppermute in partial-auto mode
+        # (jaxlib 0.4.x), the local-quant psum reduction stands in.
         if len(dp_axes) > 1:
             grads = jax.tree.map(lambda g: jax.lax.psum(g, dp_axes[1:]),
                                  grads)
-        grads = compressed_psum_tree_butterfly(grads, dp_axes[0])
+        reduce_tree = (compressed_psum_tree_butterfly
+                       if PARTIAL_AUTO_PPERMUTE_OK
+                       else compressed_psum_tree_local_quant)
+        grads = reduce_tree(grads, dp_axes[0])
         grads = jax.tree.map(
-            lambda g: g / jax.lax.axis_size(dp_axes[0]), grads)
+            lambda g: g / axis_size(dp_axes[0]), grads)
         if len(dp_axes) > 1:
             grads = jax.tree.map(
-                lambda g: g / jax.lax.axis_size(dp_axes[1:][0]), grads)
+                lambda g: g / axis_size(dp_axes[1:][0]), grads)
         loss = jax.lax.pmean(loss, dp_axes)
         metrics = jax.tree.map(lambda v: jax.lax.pmean(v, dp_axes), metrics)
         return loss, metrics, grads
@@ -152,6 +184,6 @@ def make_compressed_grad_fn(loss_fn, mesh, mesh_cfg, batch_pspec_tree):
     out_specs = (P(), P(), P())
     # check_vma=False: the ring all-reduce produces identical values on all
     # devices, but value-based replication can't be inferred through ppermute
-    return jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
+    return shard_map(local_step, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, axis_names=set(dp_axes),
                          check_vma=False)

@@ -198,6 +198,19 @@ class RTLEmulator:
             jnp.asarray(fxp_to_int(x, in_fmt), jnp.int32))
 
 
+def outputs_by_mode(graph: Graph, x_int,
+                    modes: Sequence[str] = RTLEmulator.MODES
+                    ) -> Dict[str, np.ndarray]:
+    """Run the same integer stimulus through each execution path.
+
+    The conformance harness's raw material: one fresh emulator per mode (so
+    no program cache can alias the paths), int32 outputs keyed by mode name.
+    """
+    return {m: np.asarray(RTLEmulator(graph, mode=m).run_int(x_int).outputs,
+                          np.int64)
+            for m in modes}
+
+
 # --------------------------------------------------------------------------- #
 # Float oracle: identical semantics expressed with fxp_quantize only
 # --------------------------------------------------------------------------- #

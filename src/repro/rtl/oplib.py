@@ -39,7 +39,7 @@ from repro.kernels.lstm_cell_int import CellSpec, lstm_window_int
 from repro.quant.fixedpoint import FxpFormat, fxp_quantize, fxp_requant_int
 from repro.quant.qat import hard_sigmoid, hard_tanh
 from repro.rtl import templates as T
-from repro.rtl.ir import (ActApplyNode, ActLUTNode, Conv1dNode,
+from repro.rtl.ir import (ActApplyNode, ActLUTNode, Conv1dNode, Edge,
                           ElementwiseNode, Graph, LinearNode, LSTMCellNode,
                           Node, lower_conv_model, lower_lstm_model)
 from repro.rtl.resources import (CONV_DSP, LINEAR_DSP, LSTM_DSP,
@@ -149,6 +149,53 @@ class HWTemplate:
     #: top-netlist port names for the default single-in/single-out instance
     port_in: str = "x"
     port_out: str = "y"
+
+    # ---- verify -----------------------------------------------------------
+    def input_spec(self, node: Node, graph: Graph):
+        """(per-sample shape, FxpFormat) of the edge driving this node —
+        what a stimulus generator must produce. Default: the first input."""
+        e = graph.edges[node.inputs[0]]
+        return e.shape, e.fmt
+
+    def sample_inputs(self, node: Node, graph: Graph, rng, *,
+                      batch: int = 8) -> np.ndarray:
+        """Deterministic float stimulus for property-based conformance
+        fuzzing (``repro.verify``): the three corner rows (all-zero /
+        rail-low / rail-high codes) followed by seeded uniform codes over
+        the representable range, dequantized — so ``fxp_to_int`` recovers
+        exactly the drawn codes and the run is reproducible from ``rng``'s
+        seed. Templates with structured stimulus needs override this.
+        """
+        from repro.verify.vectors import corner_codes
+
+        shape, fmt = self.input_spec(node, graph)
+        corners = corner_codes(shape, fmt)[:batch]
+        n_rand = batch - corners.shape[0]
+        codes = corners
+        if n_rand > 0:
+            rand = rng.integers(fmt.lo, fmt.hi + 1, size=(n_rand, *shape),
+                                dtype=np.int64).astype(np.int32)
+            codes = np.concatenate([corners, rand], axis=0)
+        return codes.astype(np.float32) / fmt.scale
+
+    def probe_graph(self, rng) -> Optional[Graph]:
+        """A minimal standalone design exercising just this template, with
+        ``rng``-drawn constants — the unit the conformance harness fuzzes
+        per registered kind. ``None`` means the template has no standalone
+        compute (shared ROMs) and is covered through the kinds that use it.
+        """
+        return None
+
+    def error_budget_lsb(self, node: Node) -> int:
+        """Allowed |int − float-oracle| at this node's output, in output
+        LSBs, for the conformance error budget (DESIGN.md §10). The
+        built-in templates return 0: inside the §4 exactness envelope
+        (``ir.validate_formats``) int32 arithmetic and the f32 oracle agree
+        integer-for-integer, so any nonzero difference is a bug, not noise.
+        A third-party template whose schedule reorders accumulation beyond
+        the envelope declares its slack here instead of weakening the
+        global contract."""
+        return 0
 
     # ---- emulate ----------------------------------------------------------
     def prepare(self, node: Node, graph: Graph) -> Dict:
@@ -298,6 +345,20 @@ class LinearTemplate(HWTemplate):
             requant_shift=requant_shift(n.in_fmt, n.w_fmt,
                                         n.out_fmt))
 
+    def probe_graph(self, rng) -> Graph:
+        in_fmt, out_fmt = FxpFormat(8, 4), FxpFormat(16, 8)
+        g = Graph(name="probe_linear")
+        g.edges["x"] = Edge("x", (5,), in_fmt)
+        g.inputs = ["x"]
+        g.add(LinearNode(
+            name="linear_0", op=self.kind, inputs=["x"], outputs=["y"],
+            weight=(rng.standard_normal((5, 3)) * 0.5).astype(np.float32),
+            bias=(rng.standard_normal(3) * 0.1).astype(np.float32),
+            w_fmt=FxpFormat(8, 6), in_fmt=in_fmt, out_fmt=out_fmt),
+            Edge("y", (3,), out_fmt))
+        g.outputs = ["y"]
+        return g
+
     def cost(self, n: LinearNode) -> NodeCost:
         macs = n.macs()
         mac_cycles = math.ceil(macs / LINEAR_DSP)
@@ -408,6 +469,30 @@ class LSTMCellTemplate(HWTemplate):
             sigmoid_lut=n.sigmoid_lut, tanh_lut=n.tanh_lut,
             act_bits=n.act_fmt.total_bits)
 
+    def probe_graph(self, rng) -> Graph:
+        d_in, hidden, seq = 1, 4, 3
+        act, state = FxpFormat(8, 4), FxpFormat(16, 8)
+        g = Graph(name="probe_lstm_cell")
+        g.edges["x"] = Edge("x", (seq, d_in), act)
+        g.inputs = ["x"]
+        sig = ActLUTNode(name="hard_sigmoid_lut", op="act_lut", inputs=[],
+                         outputs=[], kind="hard_sigmoid", in_fmt=act,
+                         out_fmt=act)
+        tanh = ActLUTNode(name="hard_tanh_lut", op="act_lut", inputs=[],
+                          outputs=[], kind="hard_tanh", in_fmt=act,
+                          out_fmt=act)
+        g.nodes += [sig, tanh]
+        g.add(LSTMCellNode(
+            name="lstm_cell_0", op=self.kind, inputs=["x"], outputs=["h"],
+            weight=(rng.standard_normal((d_in + hidden, 4 * hidden)) * 0.4)
+            .astype(np.float32),
+            bias=(rng.standard_normal(4 * hidden) * 0.1).astype(np.float32),
+            act_fmt=act, state_fmt=state, seq_len=seq, d_in=d_in,
+            hidden=hidden, sigmoid_lut=sig.name, tanh_lut=tanh.name),
+            Edge("h", (hidden,), act))
+        g.outputs = ["h"]
+        return g
+
     def cost(self, n: LSTMCellNode) -> NodeCost:
         per_step_macs = (n.d_in + n.hidden) * 4 * n.hidden
         mac_cycles = math.ceil(per_step_macs / LSTM_DSP)
@@ -494,6 +579,22 @@ class Conv1dTemplate(HWTemplate):
             requant_shift=requant_shift(n.in_fmt, n.w_fmt,
                                         n.out_fmt))
 
+    def probe_graph(self, rng) -> Graph:
+        K, C, S = 3, 2, 8
+        fmt = FxpFormat(8, 4)
+        node = Conv1dNode(
+            name="conv1d_0", op=self.kind, inputs=["x"], outputs=["y"],
+            weight=(rng.standard_normal((K, C)) * 0.5).astype(np.float32),
+            bias=(rng.standard_normal(C) * 0.1).astype(np.float32),
+            kernel=K, stride=1, seq_len=S, channels=C,
+            in_fmt=fmt, out_fmt=fmt)
+        g = Graph(name="probe_conv1d")
+        g.edges["x"] = Edge("x", (S, C), fmt)
+        g.inputs = ["x"]
+        g.add(node, Edge("y", (node.out_len, C), fmt))
+        g.outputs = ["y"]
+        return g
+
     def cost(self, n: Conv1dNode) -> NodeCost:
         macs = n.macs()
         mac_cycles = math.ceil(macs / CONV_DSP)
@@ -550,6 +651,22 @@ class ActApplyTemplate(HWTemplate):
     node_cls = ActApplyNode
     sequential = False
 
+    def probe_graph(self, rng) -> Graph:
+        """Also the act_lut vertical's probe: the shared ROM only computes
+        through an application node, so they are fuzzed together."""
+        fmt = FxpFormat(8, 4)
+        kind = ("hard_sigmoid", "hard_tanh")[int(rng.integers(0, 2))]
+        g = Graph(name="probe_act_apply")
+        g.edges["x"] = Edge("x", (6,), fmt)
+        g.inputs = ["x"]
+        lut = ActLUTNode(name=f"{kind}_lut", op="act_lut", inputs=[],
+                         outputs=[], kind=kind, in_fmt=fmt, out_fmt=fmt)
+        g.nodes.append(lut)
+        g.add(ActApplyNode(name="act_0", op=self.kind, inputs=["x"],
+                           outputs=["y"], lut=lut.name), Edge("y", (6,), fmt))
+        g.outputs = ["y"]
+        return g
+
     def execute(self, n: ActApplyNode, env: Dict, em, mode: str) -> None:
         env[n.outputs[0]] = em.lookup(n.lut, env[n.inputs[0]])
 
@@ -576,6 +693,19 @@ class ElementwiseTemplate(HWTemplate):
 
     kind = "elementwise"
     node_cls = ElementwiseNode
+
+    def probe_graph(self, rng) -> Graph:
+        fmt, out_fmt = FxpFormat(8, 4), FxpFormat(8, 5)
+        ew_kind = ("mul", "add")[int(rng.integers(0, 2))]
+        g = Graph(name="probe_elementwise")
+        g.edges["x"] = Edge("x", (6,), fmt)
+        g.inputs = ["x"]
+        g.add(ElementwiseNode(name="ew_0", op=self.kind, inputs=["x", "x"],
+                              outputs=["y"], kind=ew_kind, a_fmt=fmt,
+                              b_fmt=fmt, out_fmt=out_fmt),
+              Edge("y", (6,), out_fmt))
+        g.outputs = ["y"]
+        return g
 
     def execute(self, n, env: Dict, em, mode: str) -> None:
         a = env[n.inputs[0]].astype(jnp.int32)

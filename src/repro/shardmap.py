@@ -1,0 +1,68 @@
+"""``jax.shard_map`` across jax generations — one import site for the repo.
+
+The model/optimizer code is written against the current top-level
+``jax.shard_map`` API (``axis_names=`` partial-manual mode, ``check_vma=``,
+``jax.lax.pvary``). Older jaxlib builds (0.4.x, this container) ship the
+same machinery as ``jax.experimental.shard_map.shard_map`` with the
+pre-VMA spellings (``auto=``, ``check_rep=``) and no ``pvary``. This module
+maps one onto the other so every caller — ``repro.model.moe``,
+``repro.optim.compress``, the multi-device tests — writes the current API
+once and runs on either jax.
+
+Mapping notes for the legacy path:
+
+* ``axis_names={...}`` (manual only over those axes) becomes
+  ``auto = mesh.axis_names - axis_names``;
+* ``check_vma`` maps to ``check_rep``, except that partial-auto mode
+  predates reliable replication checking, so any ``auto`` set forces
+  ``check_rep=False``;
+* ``pvary`` is an identity: it only exists to annotate varying-ness for the
+  VMA checker, which the legacy path doesn't run.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):                     # current API (jax >= 0.6)
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+
+    pvary = jax.lax.pvary
+    axis_size = jax.lax.axis_size
+    #: current jaxlib partitions ppermute inside partial-auto regions fine
+    PARTIAL_AUTO_PPERMUTE_OK = True
+
+else:                                             # legacy experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        auto = (frozenset(mesh.axis_names) - set(axis_names)
+                if axis_names is not None else frozenset())
+        check_rep = True if check_vma is None else bool(check_vma)
+        if auto:
+            check_rep = False
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep,
+                          auto=auto)
+
+    def pvary(x, axis_names):                     # noqa: ARG001
+        return x
+
+    def axis_size(axis_name):
+        """``jax.lax.axis_size`` does not exist yet on 0.4.x jax;
+        psum(1) over the axis is its identity."""
+        return jax.lax.psum(1, axis_name)
+
+    #: 0.4.x jaxlib hard-aborts (spmd_partitioner.cc Check failure) on a
+    #: ppermute inside a partially-manual region — callers that mix manual
+    #: DP with auto TP must pick a gather-based collective instead.
+    PARTIAL_AUTO_PPERMUTE_OK = False

@@ -1,0 +1,34 @@
+"""Elastic Node conformance subsystem (DESIGN.md §10).
+
+The paper's workflow has two halves: the Creator *generates* accelerators,
+the Elastic Node *verifies* them — "the performance of the accelerator can
+be sufficiently guaranteed". This package is that verification half as a
+first-class API, applied uniformly to every registered deployment target
+and hardware template:
+
+* :mod:`repro.verify.vectors`     — deterministic golden stimulus/response
+  sets per design, serialized as portable ``.npz`` + JSON manifest (the
+  hand-off artifact for real-FPGA bring-up);
+* :mod:`repro.verify.conformance` — differential execution (all emulator
+  modes mutually bit-exact; int vs float-oracle within the wordlength-
+  derived error budget; golden replay) → :class:`ConformanceReport`;
+* :mod:`repro.verify.protocol`    — the measurement procedure (warmup,
+  ``n_runs``, latency/energy tolerance bands against the XC7S15 model and
+  the paper's Table I numbers).
+
+Entry points: ``Deployment.verify(...)`` on any translated artifact,
+``Workflow(verify=True)`` for the feedback loop, and
+``examples/elastic_workflow.py --verify`` / the CI conformance job for the
+end-to-end run.
+"""
+from repro.verify.conformance import (ConformanceReport,  # noqa: F401
+                                      fuzz_template, graph_error_budget_lsb,
+                                      run_conformance, verify_deployment)
+from repro.verify.protocol import (TABLE1_GOP_PER_J,  # noqa: F401
+                                   TABLE1_LATENCY_US, TABLE1_POWER_MW,
+                                   MeasurementProtocol, ProtocolCheck,
+                                   ProtocolReport, run_protocol)
+from repro.verify.vectors import (GOLDEN_SEED, VectorSet,  # noqa: F401
+                                  canonical_graph, emit_golden,
+                                  generate_vectors, load_vectors,
+                                  save_vectors)

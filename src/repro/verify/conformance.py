@@ -1,0 +1,274 @@
+"""Differential conformance — the Elastic Node's pass/fail logic.
+
+One design, three independent implementations of its integer semantics (the
+``fused``/``pallas``/``jnp`` emulator paths) and one float oracle
+(``reference_apply``, built only from ``fxp_quantize``). Conformance means:
+
+1. **mutual bit-exactness** — every execution mode produces the *same int32
+   codes* for the same stimulus (a divergence is a miscompiled schedule);
+2. **oracle agreement within budget** — int output vs the float oracle stays
+   within a per-design error budget in output LSBs, derived from the fixed-
+   point wordlengths: inside the §4 exactness envelope the budget is 0
+   (exact equality is the contract), and any slack must be *declared* by a
+   template (``HWTemplate.error_budget_lsb``), never assumed;
+3. **golden replay** (when a stored vector set is supplied) — responses
+   match the checked-in set integer-for-integer, i.e. the flashed design
+   still behaves like the one that was signed off.
+
+``run_conformance`` produces a structured :class:`ConformanceReport`;
+``verify_deployment`` is the uniform ``Deployment.verify`` entry point that
+adds the measurement protocol (latency/energy bands, ``protocol.py``) and
+also covers host-executed targets (XLA), where the differential half reduces
+to an oracle comparison at float precision.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.verify.vectors import VectorSet, generate_vectors
+
+DEFAULT_MODES = ("fused", "pallas", "jnp")
+
+
+@dataclass
+class ConformanceReport:
+    """The structured verdict ``Deployment.verify`` returns (and CI uploads).
+
+    ``passed`` is the conjunction of every *enforced* sub-check; individual
+    fields keep the evidence so a failure is debuggable from the artifact
+    alone.
+    """
+
+    design: str
+    target: str
+    passed: bool = True
+    # differential half (RTL targets; empty for host-executed targets)
+    modes: Tuple[str, ...] = ()
+    modes_bit_exact: bool = True
+    mode_max_diff: Dict[str, int] = field(default_factory=dict)
+    oracle_max_lsb: float = 0.0
+    error_budget_lsb: int = 0
+    oracle_within_budget: bool = True
+    n_vectors: int = 0
+    golden_match: Optional[bool] = None      # None: no stored set replayed
+    # protocol half (both targets)
+    protocol: Optional[dict] = None
+    notes: List[str] = field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    def summary(self) -> str:
+        bits = [f"{self.design}[{self.target}]",
+                "PASS" if self.passed else "FAIL"]
+        if self.modes:
+            bits.append(f"modes={'=='.join(self.modes)}"
+                        f"{'(exact)' if self.modes_bit_exact else '(DIVERGED)'}")
+            bits.append(f"oracle<= {self.oracle_max_lsb:g} LSB "
+                        f"(budget {self.error_budget_lsb})")
+            bits.append(f"vectors={self.n_vectors}")
+        if self.golden_match is not None:
+            bits.append(f"golden={'ok' if self.golden_match else 'MISMATCH'}")
+        if self.protocol is not None:
+            bits.append(f"protocol={'ok' if self.protocol.get('passed') else 'FAIL'}")
+        return "  ".join(bits)
+
+
+def graph_error_budget_lsb(graph) -> int:
+    """The design's allowed |int − oracle| at the output, in output LSBs.
+
+    Derivation (DESIGN.md §10): every built-in template is exact inside the
+    §4 envelope — ``ir.validate_formats`` guarantees all accumulators stay
+    below 2**24, where int32 arithmetic and the f32 oracle are the same
+    function — so each contributes 0. Budgets compose additively along the
+    dataflow: a node's declared slack (``HWTemplate.error_budget_lsb``)
+    bounds its output error in its own LSBs, and downstream requantization
+    never amplifies an LSB-scale error by more than 1 code. The sum is
+    therefore a conservative bound for the whole graph.
+    """
+    from repro.rtl.oplib import get_template
+
+    return int(sum(get_template(n.op).error_budget_lsb(n)
+                   for n in graph.nodes))
+
+
+def oracle_codes(graph, stimulus_f: np.ndarray) -> np.ndarray:
+    """The float oracle's output, as int codes of the output edge format."""
+    import jax.numpy as jnp
+
+    from repro.rtl.emulator import reference_apply
+
+    fmt = graph.edges[graph.outputs[0]].fmt
+    ref = reference_apply(graph, jnp.asarray(stimulus_f, jnp.float32))
+    return np.asarray(jnp.round(ref * fmt.scale), np.int64)
+
+
+def run_conformance(graph, vectors: Optional[VectorSet] = None, *,
+                    modes: Sequence[str] = DEFAULT_MODES,
+                    target: str = "rtl",
+                    extra_stimulus: Optional[np.ndarray] = None,
+                    replay_golden: Optional[bool] = None
+                    ) -> ConformanceReport:
+    """Differential-execute ``graph`` over a golden vector set.
+
+    ``vectors=None`` generates the design's deterministic set on the fly;
+    passing a loaded set additionally replays its stored responses
+    (``golden_match`` — ``replay_golden=False`` opts a freshly generated,
+    never-stored set out of that check). ``extra_stimulus`` appends
+    caller-provided int code rows (e.g. fuzz samples from a template's
+    ``sample_inputs`` hook).
+    """
+    from repro.rtl.emulator import outputs_by_mode
+
+    rep = ConformanceReport(design=graph.name, target=target,
+                            modes=tuple(modes))
+    if replay_golden is None:
+        replay_golden = vectors is not None
+    if vectors is None:
+        vectors = generate_vectors(graph)
+    stim = vectors.stimulus
+    if extra_stimulus is not None:
+        stim = np.concatenate([stim, np.asarray(extra_stimulus, np.int32)],
+                              axis=0)
+    rep.n_vectors = int(stim.shape[0])
+
+    # 1 — every execution mode must agree integer-for-integer
+    outs = outputs_by_mode(graph, stim, modes=modes)
+    base_mode = rep.modes[0]
+    base = outs[base_mode]
+    for m in rep.modes[1:]:
+        diff = int(np.max(np.abs(outs[m] - base))) if base.size else 0
+        rep.mode_max_diff[f"{base_mode}-vs-{m}"] = diff
+        if diff != 0:
+            rep.modes_bit_exact = False
+            rep.notes.append(f"mode {m!r} diverges from {base_mode!r} by "
+                             f"up to {diff} codes")
+
+    # 2 — int vs float oracle, within the declared LSB budget
+    ref_int = oracle_codes(graph, stim.astype(np.float32)
+                           / vectors.in_fmt.scale)
+    rep.error_budget_lsb = graph_error_budget_lsb(graph)
+    rep.oracle_max_lsb = float(np.max(np.abs(base - ref_int))) \
+        if base.size else 0.0
+    rep.oracle_within_budget = rep.oracle_max_lsb <= rep.error_budget_lsb
+    if not rep.oracle_within_budget:
+        rep.notes.append(
+            f"int output deviates from the fxp_quantize oracle by "
+            f"{rep.oracle_max_lsb:g} LSB > budget {rep.error_budget_lsb}")
+
+    # 3 — golden replay: stored responses must still be what the design does
+    if replay_golden:
+        n = vectors.response.shape[0]
+        rep.golden_match = bool(np.array_equal(base[:n],
+                                               vectors.response))
+        if not rep.golden_match:
+            bad = np.argwhere(base[:n] != vectors.response)
+            rep.notes.append(
+                f"stored golden responses mismatch at {len(bad)} positions "
+                f"(first {bad[0].tolist()})")
+
+    rep.passed = (rep.modes_bit_exact and rep.oracle_within_budget
+                  and rep.golden_match is not False)
+    return rep
+
+
+def fuzz_template(kind: str, *, seed: int = 0, batch: int = 8,
+                  modes: Sequence[str] = DEFAULT_MODES
+                  ) -> Optional[ConformanceReport]:
+    """Property-check one registered hardware template.
+
+    Builds the template's ``probe_graph`` with a seeded rng, draws stimulus
+    from its ``sample_inputs`` hook (corner rows + seeded codes), and runs
+    the full differential check. Returns ``None`` for templates with no
+    standalone compute (``probe_graph() is None``) — they are covered
+    through the kinds that instantiate them. This is how third-party
+    templates inherit the harness: register, get fuzzed.
+    """
+    from repro.quant.fixedpoint import fxp_to_int
+    from repro.rtl.oplib import get_template
+
+    tmpl = get_template(kind)
+    rng = np.random.Generator(np.random.PCG64(seed))
+    graph = tmpl.probe_graph(rng)
+    if graph is None:
+        return None
+    node = next(n for n in graph.nodes if n.op == kind)
+    x = tmpl.sample_inputs(node, graph, rng, batch=batch)
+    in_fmt = graph.edges[graph.inputs[0]].fmt
+    codes = np.asarray(fxp_to_int(x, in_fmt), np.int32)
+    return run_conformance(graph, modes=modes, extra_stimulus=codes)
+
+
+# --------------------------------------------------------------------------- #
+# Deployment-level entry (what Deployment.verify calls)
+# --------------------------------------------------------------------------- #
+
+
+def verify_deployment(dep, args=None, *, model: str, model_flops: float,
+                      hw=None, protocol=None, oracle=None,
+                      modes: Sequence[str] = DEFAULT_MODES,
+                      vectors: Optional[VectorSet] = None
+                      ) -> ConformanceReport:
+    """Run any :class:`~repro.core.target.Deployment` through the Elastic
+    Node conformance protocol; the uniform body behind ``Deployment.verify``.
+
+    RTL deployments (anything carrying a lowered ``graph``) get the full
+    differential check over golden vectors plus the measurement protocol.
+    Host-executed deployments (XLA) get the measurement protocol plus, when
+    an ``oracle`` callable is provided, a float comparison of the deployed
+    executable against it.
+    """
+    from repro.verify.protocol import run_protocol
+
+    graph = getattr(dep, "graph", None)
+    if graph is not None:
+        vs = vectors if vectors is not None else generate_vectors(graph)
+        rep = run_conformance(graph, vs, modes=modes,
+                              target=dep.target or "rtl",
+                              replay_golden=vectors is not None)
+        if args is None:
+            args = (vs.stimulus_f()[:1],)
+    else:
+        rep = ConformanceReport(design=model, target=dep.target or "xla")
+        if oracle is not None and args is not None:
+            import jax
+
+            got = [np.asarray(leaf, np.float32)
+                   for leaf in jax.tree.leaves(dep(*args))]
+            want = [np.asarray(leaf, np.float32)
+                    for leaf in jax.tree.leaves(oracle(*args))]
+            err, tol, shapes_ok = 0.0, 0.0, len(got) == len(want)
+            for a, b in zip(got, want):
+                if a.shape != b.shape:
+                    shapes_ok = False
+                    break
+                if a.size:
+                    err = max(err, float(np.max(np.abs(a - b))))
+                    tol = max(tol, 1e-4 * max(1.0,
+                                              float(np.max(np.abs(b)))))
+            if not shapes_ok or err > tol:
+                rep.passed = False
+                rep.notes.append(f"deployed executable deviates from oracle "
+                                 f"by {err:g} (tol {tol:g})"
+                                 if shapes_ok else
+                                 "deployed executable and oracle disagree "
+                                 "on output structure")
+            else:
+                rep.notes.append(f"oracle agreement: max|Δ|={err:g} "
+                                 f"<= {tol:g}")
+    if args is not None:
+        prot = run_protocol(dep, args, model=model, model_flops=model_flops,
+                            hw=hw, protocol=protocol)
+        rep.protocol = prot.to_dict()
+        if not prot.passed:
+            rep.passed = False
+            rep.notes.append("measurement protocol failed: " + "; ".join(
+                c.name for c in prot.checks if c.enforced and not c.passed))
+    return rep

@@ -4,19 +4,13 @@ import subprocess
 import sys
 import textwrap
 
-import jax
-import pytest
-
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-# Every test here runs compressed_psum through jax.shard_map, which this
-# environment's jax (0.4.x) does not expose yet. Version-guarded skip: on a
-# shard_map-era jax these run for real; here they are a known env gap, so
-# skipping keeps tier-1 green and makes actual regressions visible.
-requires_shard_map = pytest.mark.skipif(
-    not hasattr(jax, "shard_map"),
-    reason="needs the jax.shard_map API (pre-existing env gap, "
-           f"jax=={jax.__version__})")
+# Every test here runs compressed_psum through shard_map. The subprocess
+# bodies import ``repro.shardmap.shard_map`` — the repo-wide compat wrapper
+# that resolves to ``jax.shard_map`` on current jax and to
+# ``jax.experimental.shard_map`` (auto=/check_rep= spellings) on 0.4.x — so
+# the suite runs for real on either generation instead of version-skipping.
 
 
 def run_sub(body: str, n_dev: int = 8, timeout: int = 900) -> str:
@@ -34,18 +28,18 @@ def run_sub(body: str, n_dev: int = 8, timeout: int = 900) -> str:
     return r.stdout
 
 
-@requires_shard_map
 def test_compressed_psum_matches_f32():
     run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.optim.compress import compressed_psum_vec
+        from repro.shardmap import shard_map
 
         mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
         def both(x):
             return (jax.lax.psum(x, "data"),
                     compressed_psum_vec(x, "data"))
-        f = jax.shard_map(both, mesh=mesh, in_specs=P("data"),
+        f = shard_map(both, mesh=mesh, in_specs=P("data"),
                           out_specs=(P(), P()), axis_names={"data"}, check_vma=False)
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 1000))
         with mesh:
@@ -56,20 +50,20 @@ def test_compressed_psum_matches_f32():
     """)
 
 
-@requires_shard_map
 def test_compressed_wire_bytes_less_than_f32():
     run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.optim.compress import compressed_psum_vec
+        from repro.shardmap import shard_map
         from repro.energy.roofline import parse_collectives
 
         mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
         SZ = 1 << 16
-        f32 = jax.shard_map(lambda x: jax.lax.psum(x, "data"), mesh=mesh,
+        f32 = shard_map(lambda x: jax.lax.psum(x, "data"), mesh=mesh,
                             in_specs=P("data"), out_specs=P(),
                             axis_names={"data"}, check_vma=False)
-        cmp = jax.shard_map(lambda x: compressed_psum_vec(x, "data"),
+        cmp = shard_map(lambda x: compressed_psum_vec(x, "data"),
                             mesh=mesh, in_specs=P("data"), out_specs=P(),
                             axis_names={"data"}, check_vma=False)
         sds = jax.ShapeDtypeStruct((8 * SZ,), jnp.float32)
@@ -84,7 +78,6 @@ def test_compressed_wire_bytes_less_than_f32():
     """)
 
 
-@requires_shard_map
 def test_trainer_with_compression_learns():
     run_sub("""
         import numpy as np, jax, jax.numpy as jnp
@@ -108,9 +101,14 @@ def test_trainer_with_compression_learns():
         with mesh:
             step = jax.jit(st.train_fn())
             losses = []
+            # overfit one fixed batch: fresh random batches carry no
+            # learnable signal in 15 steps, so the integration check is
+            # "grads flow through the compressed reduction and the loss
+            # memorizes", the standard trainer smoke
+            batch = lm_batch_for_step(dcfg, 0)
             for i in range(15):
-                params, opt, m = step(params, opt, lm_batch_for_step(dcfg, i))
+                params, opt, m = step(params, opt, batch)
                 losses.append(float(m["loss"]))
         print("losses:", losses[0], "->", losses[-1])
-        assert losses[-1] < losses[0], losses
+        assert losses[-1] < losses[0] - 0.1, losses
     """)

@@ -1,0 +1,365 @@
+"""Elastic Node conformance subsystem: differential harness, golden-vector
+protocol, measurement bands, and property fuzzing over every registered
+hardware template (including an in-test custom one, proving third-party
+templates inherit the harness for free)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                       # image lacks hypothesis: use shim
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.creator import Creator
+from repro.core.types import SHAPES_CONV1D, SHAPES_LSTM
+from repro.energy.hw import XC7S15
+from repro.quant.fixedpoint import FxpFormat, fxp_quantize
+from repro.rtl import (Edge, Graph, HWTemplate, emit_graph, lower_model,
+                       list_templates, register_template,
+                       unregister_template)
+from repro.rtl.ir import Node
+from repro.verify import (GOLDEN_SEED, MeasurementProtocol, canonical_graph,
+                          emit_golden, fuzz_template, generate_vectors,
+                          load_vectors, run_conformance, save_vectors)
+
+GOLDEN_ROOT = os.path.join(os.path.dirname(__file__), "golden")
+VECTOR_ROOT = os.path.join(GOLDEN_ROOT, "vectors")
+ARCHS = ("elastic-lstm", "elastic-conv1d")
+
+
+# --------------------------------------------------------------------------- #
+# Property fuzz: every registered template kind, via its sample_inputs hook
+# --------------------------------------------------------------------------- #
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_fuzz_every_registered_template(seed):
+    """The bit-exactness contract + error budget hold for every registered
+    kind over seeded probe designs and stimulus from each template's own
+    ``sample_inputs`` hook."""
+    probed = 0
+    for kind in list_templates():
+        rep = fuzz_template(kind, seed=seed)
+        if rep is None:                  # no standalone compute (shared ROM)
+            assert kind == "act_lut"
+            continue
+        probed += 1
+        assert rep.modes_bit_exact, (kind, seed, rep.to_json())
+        assert rep.oracle_within_budget, (kind, seed, rep.to_json())
+        assert rep.passed, (kind, seed, rep.to_json())
+    assert probed >= 5                   # all built-ins except the bare ROM
+
+
+class _DoubleNode(Node):
+    fmt: FxpFormat = FxpFormat(8, 4)
+
+    def __init__(self, **kw):
+        self.fmt = kw.pop("fmt", FxpFormat(8, 4))
+        super().__init__(**kw)
+
+
+class _DoubleTemplate(HWTemplate):
+    """y = saturate(2·x): one adder, no memories — a minimal third-party
+    template that implements only the plugin hooks."""
+
+    kind = "double_test"
+    node_cls = _DoubleNode
+
+    def execute(self, n, env, em, mode):
+        x = env[n.inputs[0]].astype(jnp.int32)
+        env[n.outputs[0]] = jnp.clip(2 * x, n.fmt.lo, n.fmt.hi)
+
+    def reference(self, n, env, luts):
+        env[n.outputs[0]] = fxp_quantize(2.0 * env[n.inputs[0]], n.fmt)
+
+    def emit(self, graph, n, out):
+        out[f"{n.name}.vhd"] = f"entity {n.name} is\nend entity {n.name};\n"
+
+    def probe_graph(self, rng):
+        fmt = FxpFormat(8, 4)
+        g = Graph(name="probe_double")
+        g.edges["x"] = Edge("x", (4,), fmt)
+        g.inputs = ["x"]
+        g.add(_DoubleNode(name="d0", op=self.kind, inputs=["x"],
+                          outputs=["y"], fmt=fmt), Edge("y", (4,), fmt))
+        g.outputs = ["y"]
+        return g
+
+
+def test_custom_template_inherits_harness():
+    """Register → fuzz: a template that only implements the plugin hooks
+    gets the full differential check without touching repro internals."""
+    register_template(_DoubleTemplate())
+    try:
+        rep = fuzz_template("double_test", seed=7)
+        assert rep is not None and rep.passed, rep and rep.to_json()
+        assert rep.modes_bit_exact and rep.oracle_within_budget
+        assert rep.n_vectors >= 8
+    finally:
+        unregister_template("double_test")
+
+
+def test_error_budget_gates_oracle_mismatch():
+    """A template whose int path deviates by 1 LSB fails at the default
+    0-LSB budget and passes once it *declares* that slack — the budget is
+    derived from declarations, never assumed."""
+
+    class OffByOne(_DoubleTemplate):
+        kind = "offbyone_test"
+
+        def execute(self, n, env, em, mode):
+            x = env[n.inputs[0]].astype(jnp.int32)
+            env[n.outputs[0]] = jnp.clip(2 * x + 1, n.fmt.lo, n.fmt.hi)
+
+    class OffByOneDeclared(OffByOne):
+        kind = "offbyone_test"
+
+        def error_budget_lsb(self, node):
+            return 1
+
+    register_template(OffByOne())
+    try:
+        rep = fuzz_template("offbyone_test", seed=1)
+        assert not rep.passed and not rep.oracle_within_budget
+        assert rep.oracle_max_lsb >= 1 and rep.error_budget_lsb == 0
+        register_template(OffByOneDeclared(), overwrite=True)
+        rep2 = fuzz_template("offbyone_test", seed=1)
+        assert rep2.passed and rep2.oracle_within_budget
+        assert rep2.error_budget_lsb == 1
+    finally:
+        unregister_template("offbyone_test")
+
+
+def test_conformance_detects_mode_divergence():
+    """A schedule that miscompiles in one execution path must fail the
+    mutual bit-exactness check, not slide through on the oracle."""
+
+    class ModeSkewed(_DoubleTemplate):
+        kind = "modeskew_test"
+
+        def execute(self, n, env, em, mode):
+            x = env[n.inputs[0]].astype(jnp.int32)
+            bump = 1 if mode == "jnp" else 0
+            env[n.outputs[0]] = jnp.clip(2 * x + bump, n.fmt.lo, n.fmt.hi)
+
+    register_template(ModeSkewed())
+    try:
+        rep = fuzz_template("modeskew_test", seed=2)
+        assert not rep.passed and not rep.modes_bit_exact
+        assert any(v > 0 for v in rep.mode_max_diff.values())
+    finally:
+        unregister_template("modeskew_test")
+
+
+# --------------------------------------------------------------------------- #
+# Golden vectors: determinism, round-trip, checked-in snapshots
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_vector_emit_twice_byte_identical(arch, tmp_path):
+    """Generating + serializing the same design's vectors twice yields
+    byte-identical .npz and manifest files (the snapshot contract)."""
+    d1, d2 = tmp_path / "a", tmp_path / "b"
+    graph, _, _ = canonical_graph(arch)
+    save_vectors(generate_vectors(graph), str(d1))
+    save_vectors(generate_vectors(graph), str(d2))
+    for name in ("vectors.npz", "manifest.json"):
+        assert (d1 / name).read_bytes() == (d2 / name).read_bytes(), name
+
+
+def test_vector_set_round_trip(tmp_path):
+    graph, _, _ = canonical_graph("elastic-lstm")
+    vs = generate_vectors(graph)
+    save_vectors(vs, str(tmp_path))
+    back = load_vectors(str(tmp_path))
+    assert back.design == vs.design and back.seed == GOLDEN_SEED
+    assert back.in_fmt == vs.in_fmt and back.out_fmt == vs.out_fmt
+    assert np.array_equal(back.stimulus, vs.stimulus)
+    assert np.array_equal(back.response, vs.response)
+    # corner rows lead: silence, rail-low, rail-high
+    assert np.all(back.stimulus[0] == 0)
+    assert np.all(back.stimulus[1] == vs.in_fmt.lo)
+    assert np.all(back.stimulus[2] == vs.in_fmt.hi)
+
+
+def test_vector_set_checksum_validation(tmp_path):
+    """A tampered vector file must be rejected, not silently replayed."""
+    graph, _, _ = canonical_graph("elastic-lstm")
+    save_vectors(generate_vectors(graph), str(tmp_path))
+    man_path = tmp_path / "manifest.json"
+    man = json.loads(man_path.read_text())
+    man["response"]["sha256"] = "0" * 64
+    man_path.write_text(json.dumps(man))
+    with pytest.raises(ValueError, match="sha256 mismatch"):
+        load_vectors(str(tmp_path))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_checked_in_golden_vectors_replay(arch, tmp_path):
+    """The checked-in stimulus/response sets are (a) exactly what the
+    generator emits today — byte-for-byte — and (b) replayable: the lowered
+    design still produces the stored responses integer-for-integer."""
+    got = emit_golden(arch, str(tmp_path))
+    golden_dir = os.path.join(VECTOR_ROOT, arch)
+    for name in ("vectors.npz", "manifest.json"):
+        want = open(os.path.join(golden_dir, name), "rb").read()
+        have = open(os.path.join(str(tmp_path), arch, name), "rb").read()
+        assert have == want, (
+            f"{arch}/{name} drifted from tests/golden/vectors — if the "
+            f"change is intentional, regenerate via "
+            f"repro.verify.emit_golden({arch!r}, 'tests/golden/vectors')")
+    vs = load_vectors(golden_dir)
+    assert vs.n_vectors == got.n_vectors
+    graph, _, _ = canonical_graph(arch)
+    rep = run_conformance(graph, vs)
+    assert rep.golden_match is True and rep.passed, rep.to_json()
+
+
+def test_elastic_conv1d_manifest_matches_golden():
+    """conv1d parity with the lstm snapshot: the second arch's emitted
+    manifest is pinned too (weight-independent, so platform-stable)."""
+    from repro.model.conv1d import conv1d_schema
+    from repro.model.layers import init_params
+
+    cfg = get_config("elastic-conv1d")
+    params = init_params(conv1d_schema(cfg), jax.random.PRNGKey(0))
+    got = emit_graph(lower_model(cfg, params))["manifest.json"]
+    with open(os.path.join(GOLDEN_ROOT,
+                           "elastic_conv1d_manifest.json")) as f:
+        want = f.read()
+    assert got == want, (
+        "manifest.json drifted from tests/golden/elastic_conv1d_manifest"
+        ".json — if the change is intentional, regenerate the snapshot")
+
+
+# --------------------------------------------------------------------------- #
+# Deployment.verify: both registered archs × both registered targets
+# --------------------------------------------------------------------------- #
+
+
+def _flops(cfg):
+    if cfg.family == "lstm":
+        from repro.model.lstm import lstm_flops
+
+        return float(lstm_flops(cfg))
+    from repro.model.conv1d import conv1d_flops
+
+    return float(conv1d_flops(cfg))
+
+
+def _shapes(cfg):
+    return SHAPES_LSTM if cfg.family == "lstm" else SHAPES_CONV1D
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_deployment_verify_rtl(arch):
+    """translate(target="rtl") → verify(): modes mutually bit-exact, oracle
+    within budget, protocol bands (incl. Table I for the reference design)
+    all pass — the acceptance path."""
+    cfg = get_config(arch)
+    cr = Creator(hw=XC7S15)
+    st_ = cr.build(cfg, _shapes(cfg)["infer_1"])
+    _, dep = cr.translate(st_, target="rtl")
+    rep = dep.verify(model=cfg.name, model_flops=_flops(cfg))
+    assert rep.passed, rep.to_json()
+    assert rep.modes == ("fused", "pallas", "jnp") and rep.modes_bit_exact
+    assert rep.oracle_within_budget and rep.error_budget_lsb == 0
+    assert rep.n_vectors >= 16
+    assert rep.protocol is not None and rep.protocol["passed"]
+    check_names = {c["name"] for c in rep.protocol["checks"]}
+    assert "latency_vs_cycle_model" in check_names
+    if arch == "elastic-lstm":
+        assert "latency_vs_table1_us" in check_names
+        assert "gop_per_j_vs_table1" in check_names
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_deployment_verify_xla(arch):
+    """The same verify() contract on the host-executed target: protocol
+    plus float-oracle agreement of the deployed executable."""
+    cfg = get_config(arch)
+    cr = Creator()
+    st_ = cr.build(cfg, _shapes(cfg)["infer_1"])
+    _, dep = cr.translate(st_, target="xla")
+    params, _ = st_.init()
+    ab = st_.abstract_inputs()
+    batch = {k: (jax.random.normal(jax.random.PRNGKey(0), v.shape)
+                 if k == "x" else jnp.zeros(v.shape, v.dtype))
+             for k, v in ab["batch"].items()}
+    if cfg.family == "lstm":
+        from repro.model.lstm import lstm_apply as apply_fn
+    else:
+        from repro.model.conv1d import conv1d_apply as apply_fn
+    rep = dep.verify((params, batch), model=cfg.name,
+                     model_flops=_flops(cfg),
+                     oracle=lambda p, b: apply_fn(p, b["x"], cfg))
+    assert rep.passed, rep.to_json()
+    assert rep.target == "xla" and rep.modes == ()
+    assert rep.protocol is not None and rep.protocol["passed"]
+    assert any("oracle agreement" in n for n in rep.notes)
+
+
+def test_protocol_band_failure_is_reported():
+    """An impossible tolerance band must fail the protocol — proving the
+    Table-I comparison has teeth, not just presence."""
+    cfg = get_config("elastic-lstm")
+    cr = Creator(hw=XC7S15)
+    st_ = cr.build(cfg, SHAPES_LSTM["infer_1"])
+    _, dep = cr.translate(st_, target="rtl")
+    rep = dep.verify(model=cfg.name, model_flops=_flops(cfg),
+                     protocol=MeasurementProtocol(n_runs=2,
+                                                  table1_rtol=1e-6))
+    assert not rep.passed
+    assert rep.protocol is not None and not rep.protocol["passed"]
+    failed = [c["name"] for c in rep.protocol["checks"]
+              if c["enforced"] and not c["passed"]]
+    assert any("table1" in n for n in failed)
+
+
+def test_workflow_verify_stage_records_conformance():
+    """Workflow(verify=True): the loop's records carry the ConformanceReport
+    from the Elastic Node stage."""
+    from repro.core.report import DesignReport
+    from repro.core.workflow import Requirement, Workflow
+    from repro.model.layers import init_params
+    from repro.model.lstm import lstm_schema
+
+    cfg = get_config("elastic-lstm")
+
+    def train_fn(knobs):
+        params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+        return params, DesignReport(model=cfg.name, train_loss=0.0,
+                                    eval_loss=0.0), None
+
+    def step_builder(knobs, params):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 1))
+        return None, (params, x), _flops(cfg)
+
+    wf = Workflow(creator=Creator(hw=XC7S15), train_fn=train_fn,
+                  step_builder=step_builder,
+                  stepper_builder=lambda k: Creator(hw=XC7S15).build(
+                      cfg, SHAPES_LSTM["infer_1"]),
+                  target="rtl", verify=True)
+    hist = wf.run(Requirement(max_latency_s=1.0), lambda h: None, {},
+                  max_iters=1)
+    rec = hist[0]
+    assert rec.conformance is not None
+    assert rec.conformance.passed, rec.conformance.to_json()
+    assert rec.conformance.modes_bit_exact
+    # verify=False (the default) stays free of the extra stage
+    wf2 = Workflow(creator=Creator(hw=XC7S15), train_fn=train_fn,
+                   step_builder=step_builder,
+                   stepper_builder=lambda k: Creator(hw=XC7S15).build(
+                       cfg, SHAPES_LSTM["infer_1"]),
+                   target="rtl")
+    rec2 = wf2.run_once({}, 0)
+    assert rec2.conformance is None

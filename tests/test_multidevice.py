@@ -5,18 +5,11 @@ import subprocess
 import sys
 import textwrap
 
-import jax
-import pytest
-
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-# The MoE EP paths call jax.shard_map, which this environment's jax (0.4.x)
-# does not expose yet. Version-guarded skip: on a shard_map-era jax the test
-# runs (and a real regression would fail it); here it is a known env gap.
-requires_shard_map = pytest.mark.skipif(
-    not hasattr(jax, "shard_map"),
-    reason="needs the jax.shard_map API (pre-existing env gap, "
-           f"jax=={jax.__version__})")
+# The MoE EP paths go through ``repro.shardmap.shard_map`` — the repo-wide
+# compat wrapper over ``jax.shard_map`` / ``jax.experimental.shard_map`` —
+# so they run for real on either jax generation (no version skip).
 
 
 def run_sub(body: str, n_dev: int = 8, timeout: int = 900) -> str:
@@ -34,7 +27,6 @@ def run_sub(body: str, n_dev: int = 8, timeout: int = 900) -> str:
     return r.stdout
 
 
-@requires_shard_map
 def test_moe_ep_impls_match_dense_oracle():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
