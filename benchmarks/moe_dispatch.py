@@ -36,11 +36,11 @@ for name, fn in [("dense", moe_dense), ("psum", moe_psum), ("a2a", moe_a2a)]:
         c = f.lower(params, x).compile()
         stc = parse_collectives(c.as_text(), 8)
         out = f(params, x); jax.block_until_ready(out)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(5):
             out = f(params, x)
         jax.block_until_ready(out)
-        wt = (time.time() - t0) / 5
+        wt = (time.perf_counter() - t0) / 5
     print(f"{name:>6}: wall={wt*1e3:7.1f} ms  wire_bytes={stc.total_wire_bytes:.3e}  counts={stc.counts}")
 """
 

@@ -51,8 +51,10 @@ def run(batches=DEFAULT_BATCHES, *, n_fused: int = 20, n_per_step: int = 3,
     rows = []
     for batch in batches:
         x = jax.random.normal(jax.random.PRNGKey(0), (batch, SEQ, 1))
+        s0 = fused.cache_stats()             # obs counters, per-batch delta
         fused_us = _timeit(
             lambda: jax.block_until_ready(fused.run(x).outputs), n_fused)
+        s1 = fused.cache_stats()
         per_step_us = _timeit(
             lambda: jax.block_until_ready(
                 per_step.run_per_step(x).outputs), n_per_step)
@@ -62,17 +64,27 @@ def run(batches=DEFAULT_BATCHES, *, n_fused: int = 20, n_per_step: int = 3,
             "per_step_us": round(per_step_us, 1),
             "speedup": round(per_step_us / fused_us, 2),
             "fused_us_per_window": round(fused_us / batch, 2),
+            # program-cache behavior over this batch's timed calls: one
+            # miss+retrace for the new shape, hits for every other call
+            "cache_hits": s1["hits"] - s0["hits"],
+            "cache_misses": s1["misses"] - s0["misses"],
+            "retraces": s1["retraces"] - s0["retraces"],
         }
         rows.append(row)
         print(f"batch={batch:>4} seq={SEQ}: fused {fused_us:>10.1f} us  "
               f"per-step {per_step_us:>12.1f} us  "
               f"x{row['speedup']:.1f}  ({row['fused_us_per_window']:.2f} "
-              f"us/window)")
+              f"us/window)  cache {row['cache_hits']}h/"
+              f"{row['cache_misses']}m/{row['retraces']}t")
 
+    stats = fused.cache_stats()
     result = {
         "design": "elastic-lstm",
         "backend": jax.default_backend(),
         "trace_count": fused.trace_count,    # == len(batches): one per shape
+        "cache": {"hits": stats["hits"], "misses": stats["misses"],
+                  "evictions": stats["evictions"],
+                  "dispatches": stats["dispatches"]},
         "rows": rows,
     }
     if out:

@@ -29,11 +29,11 @@ def _walltime(fn, args, n=5):
     f = jax.jit(fn)
     out = f(*args)
     jax.block_until_ready(out)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(n):
         out = f(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / n
+    return (time.perf_counter() - t0) / n
 
 
 def bench_attention(B=4, S=2048, H=8, hd=128):

@@ -9,10 +9,10 @@ import time
 
 
 def _timeit(fn, *args, n=3):
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(n):
         fn(*args)
-    return (time.time() - t0) / n * 1e6
+    return (time.perf_counter() - t0) / n * 1e6
 
 
 def main() -> None:
@@ -59,13 +59,18 @@ def main() -> None:
     print(f"resources: dsp={_syn.resources['dsp']}/20 "
           f"bram36={_syn.resources['bram36']}/10 "
           f"lut={_syn.resources['lut']}/8000  fits={_syn.fits}")
+    _cs = _exe.emulator.cache_stats()
     print(f"emulator: fused {emu_us:.0f} us/call vs per-step "
-          f"{per_step_us:.0f} us/call -> x{per_step_us/emu_us:.1f}")
+          f"{per_step_us:.0f} us/call -> x{per_step_us/emu_us:.1f}  "
+          f"cache {_cs['hits']}h/{_cs['misses']}m "
+          f"retraces={_cs['retraces']}")
     rows.append(("rtl_codegen", emu_us,
                  f"gop_per_j={_meas.gop_per_j:.2f}_vs_table1_5.33_"
                  f"err={(_meas.gop_per_j-5.33)/5.33:+.1%}_"
                  f"fused_us={emu_us:.0f}_per_step_us={per_step_us:.0f}_"
-                 f"speedup=x{per_step_us/emu_us:.1f}"))
+                 f"speedup=x{per_step_us/emu_us:.1f}_"
+                 f"cache_hits={_cs['hits']}_misses={_cs['misses']}_"
+                 f"retraces={_cs['retraces']}"))
 
     # conv1d arch through the same registry path (the op-library proof)
     from repro.core.types import SHAPES_CONV1D
@@ -100,9 +105,9 @@ def main() -> None:
     from repro.verify import run_conformance
 
     for _name, _e in (("elastic-lstm", _exe), ("elastic-conv1d", _cexe)):
-        t0 = time.time()
+        t0 = time.perf_counter()
         _rep = run_conformance(_e.graph)
-        _conf_us = (time.time() - t0) * 1e6
+        _conf_us = (time.perf_counter() - t0) * 1e6
         print(f"{_name}: {_rep.summary()}  ({_conf_us/1e3:.0f} ms)")
         rows.append((f"verify_{_name.split('-')[1]}", _conf_us,
                      f"passed={_rep.passed}_modes_exact="

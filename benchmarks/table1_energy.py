@@ -55,11 +55,11 @@ def container_measurement(n: int = 200):
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 1))
     fn = jax.jit(lambda p, xx: lstm_apply(p, xx, cfg)[0])
     fn(params, x).block_until_ready()
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(n):
         out = fn(params, x)
     out.block_until_ready()
-    return (time.time() - t0) / n
+    return (time.perf_counter() - t0) / n
 
 
 def run() -> dict:

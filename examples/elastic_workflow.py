@@ -180,6 +180,13 @@ def main():
     ap.add_argument("--build-dir", default=None,
                     help="write the final RTL artifact bundle here "
                          "(<build-dir>/<arch>/)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="capture the whole run (spans + metrics) and write "
+                         "Chrome trace-event JSON here — open it in Perfetto "
+                         "or chrome://tracing; the full RunTrace bundle "
+                         "(trace.jsonl, metrics.json, summary.txt) lands "
+                         "next to it, and a copy goes into the --build-dir "
+                         "bundle when given")
     ap.add_argument("--verify", action="store_true",
                     help="run the Elastic Node conformance stage: "
                          "Deployment.verify after every loop measurement, "
@@ -192,6 +199,13 @@ def main():
     TRAIN_STEPS = args.train_steps
     from repro.core.types import shapes_for
     from repro.energy.hw import XC7S15
+
+    cap = None
+    if args.trace:
+        from repro import obs
+
+        cap = obs.capture(f"elastic-workflow[{arch}:{target}]")
+        cap.__enter__()                  # closed (and written) at the end
 
     cfg = get_config(arch)
     infer_shape = shapes_for(cfg)[0]             # "infer_1" for both archs
@@ -272,6 +286,25 @@ def main():
             print(f"ConformanceReport + golden vectors written to {out}/")
         if not rep.passed:
             raise SystemExit("conformance FAILED — see report above")
+
+    # --- write the captured trace ---------------------------------------- #
+    if cap is not None:
+        import json
+        import os
+
+        cap.__exit__(None, None, None)
+        rt = cap.trace
+        trace_path = os.path.abspath(args.trace)
+        bundle_dir = os.path.dirname(trace_path) or "."
+        paths = rt.save(bundle_dir)
+        if trace_path != paths["trace.json"]:    # honor a custom filename
+            with open(trace_path, "w") as f:
+                json.dump(rt.chrome(), f, indent=2, sort_keys=True)
+        if out is not None:                      # copy into the RTL bundle
+            rt.save(out)
+        print(f"\n{rt.summary()}")
+        print(f"\nChrome trace written to {args.trace} "
+              f"(open in Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -41,13 +41,13 @@ def main():
                  ServerConfig(batch_slots=args.slots, max_len=128,
                               eos_token=-1), SMOKE_MESH, par)
     t_submit = {}
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.requests):
         rid = srv.submit(list(range(3 + i, 20 + i)),
                          max_new_tokens=args.max_new)
-        t_submit[rid] = time.time()
+        t_submit[rid] = time.perf_counter()
     reqs = srv.run_until_drained()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     tok = sum(len(r.out_tokens) for r in reqs)
     print(f"{len(reqs)} requests x {args.max_new} tokens in {dt:.2f}s -> "
           f"{tok/dt:.1f} tok/s with {args.slots} slots")

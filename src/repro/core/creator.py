@@ -109,7 +109,11 @@ class Creator:
         if model_flops is None and options.model_flops is None:
             model_flops = model_flops_estimate(st.cfg, st.shape)
         options = options.filled(hw=self.hw, model_flops=model_flops)
-        return tgt.translate(st.cfg, params, st, options)
+        from repro.obs import get_tracer
+
+        with get_tracer().span("creator.translate", target=tgt.name,
+                               arch=st.cfg.name):
+            return tgt.translate(st.cfg, params, st, options)
 
     # ------------------------------------------------------------------ #
     # Stage 3: execute + measure (container hardware = our Elastic Node)

@@ -77,6 +77,13 @@ class MeasurementReport:
     gop_per_j: float = 0.0
     n_runs: int = 0
     target: str = ""                 # deployment-target name ("xla"/"rtl"/…)
+    # tail latency: percentiles over the per-run execution latencies on the
+    # measuring substrate (host wall-clock for XLA; the emulator proxy's
+    # per-dispatch wall-clock for RTL, where ``latency_s`` itself stays the
+    # fabric cycle model). Deployment readiness is a tail question, not a
+    # mean — Venieris et al. 2018 (PAPERS.md).
+    latency_p50_s: float = 0.0
+    latency_p99_s: float = 0.0
     per_channel_j: Dict[str, float] = field(default_factory=dict)
 
     def to_json(self) -> str:

@@ -46,6 +46,7 @@ from repro.core.report import MeasurementReport, SynthesisReport
 from repro.energy.hw import HWSpec, TPU_V5E
 from repro.energy.meter import meter_channels
 from repro.energy.roofline import roofline
+from repro.obs import get_metrics, get_tracer, percentile
 
 #: The single documented stage-3 measurement default, shared by every
 #: target. (Pre-redesign the XLA path used 20 and the RTL path used 1; the
@@ -197,21 +198,32 @@ class XLADeployment(Deployment):
     def measure(self, args, *, model: str, model_flops: float,
                 n_runs: int = DEFAULT_N_RUNS,
                 hw: Optional[HWSpec] = None) -> MeasurementReport:
+        """Time ``n_runs`` executions, keeping every per-run latency (each
+        run is individually synchronized) so the report carries real
+        p50/p99 tail percentiles, not just the mean."""
         hw = hw or self.hw
         n_runs = max(1, n_runs)
         out = self.fn(*args)
         jax.block_until_ready(out)              # warm: compile once
-        t0 = time.time()
-        for _ in range(n_runs):
-            out = self.fn(*args)
-        jax.block_until_ready(out)
-        lat = (time.time() - t0) / n_runs
+        samples = []
+        with get_tracer().span("xla.measure", model=model, n_runs=n_runs):
+            for _ in range(n_runs):
+                t0 = time.perf_counter()
+                out = self.fn(*args)
+                jax.block_until_ready(out)
+                samples.append(time.perf_counter() - t0)
+        hist = get_metrics().histogram("measure.latency_s.xla")
+        for s in samples:
+            hist.observe(s)
+        lat = sum(samples) / n_runs
         energy = hw.energy_j(lat)
         return MeasurementReport(
             model=model, platform="container-cpu(Elastic-Node proxy)",
             latency_s=lat, power_w=hw.active_w, energy_j=energy,
             gop_per_j=(model_flops / 1e9) / energy if energy else 0.0,
-            n_runs=n_runs, target=self.target)
+            n_runs=n_runs, target=self.target,
+            latency_p50_s=percentile(samples, 50),
+            latency_p99_s=percentile(samples, 99))
 
     def save(self, build_dir: str) -> None:
         """Artifacts for this substrate: the compiled HLO plus a manifest."""
@@ -340,47 +352,54 @@ class XLATarget:
 
             ctxmgr = contextlib.nullcontext()
 
-        t0 = time.time()
+        trc = get_tracer()
+        t0 = time.perf_counter()
         with ctxmgr:
-            if kind == "train":
-                if param_sh is not None:
-                    from jax.sharding import NamedSharding
-                    from repro.model.layers import tree_map_pspec
-                    from repro.optim.adamw import opt_state_schema
+            with trc.span("xla.lower", arch=st.cfg.name, kind=kind):
+                if kind == "train":
+                    if param_sh is not None:
+                        from jax.sharding import NamedSharding
+                        from repro.model.layers import tree_map_pspec
+                        from repro.optim.adamw import opt_state_schema
 
-                    opt_sh = tree_map_pspec(
-                        lambda s: NamedSharding(st.mesh, s.pspec),
-                        opt_state_schema(st.schema, st.mesh_cfg))
-                    fn = jax.jit(st.train_fn(),
-                                 in_shardings=(param_sh, opt_sh, batch_sh),
-                                 donate_argnums=(0, 1))
+                        opt_sh = tree_map_pspec(
+                            lambda s: NamedSharding(st.mesh, s.pspec),
+                            opt_state_schema(st.schema, st.mesh_cfg))
+                        fn = jax.jit(st.train_fn(),
+                                     in_shardings=(param_sh, opt_sh,
+                                                   batch_sh),
+                                     donate_argnums=(0, 1))
+                    else:
+                        fn = jax.jit(st.train_fn(), donate_argnums=(0, 1))
+                    lowered = fn.lower(abstract["params"],
+                                       abstract["opt_state"],
+                                       abstract["batch"])
+                elif kind == "prefill":
+                    fn = jax.jit(st.prefill_fn()) if param_sh is None \
+                        else jax.jit(st.prefill_fn(),
+                                     in_shardings=(param_sh, batch_sh))
+                    lowered = fn.lower(abstract["params"], abstract["batch"])
                 else:
-                    fn = jax.jit(st.train_fn(), donate_argnums=(0, 1))
-                lowered = fn.lower(abstract["params"], abstract["opt_state"],
-                                   abstract["batch"])
-            elif kind == "prefill":
-                fn = jax.jit(st.prefill_fn()) if param_sh is None else jax.jit(
-                    st.prefill_fn(), in_shardings=(param_sh, batch_sh))
-                lowered = fn.lower(abstract["params"], abstract["batch"])
-            else:
-                if param_sh is not None:
-                    from jax.sharding import NamedSharding
-                    from repro.model.layers import tree_map_pspec
+                    if param_sh is not None:
+                        from jax.sharding import NamedSharding
+                        from repro.model.layers import tree_map_pspec
 
-                    cache_sh = tree_map_pspec(
-                        lambda s: NamedSharding(st.mesh, s.pspec),
-                        st.cache_schema())
-                    fn = jax.jit(st.decode_fn(),
-                                 in_shardings=(param_sh,
-                                               batch_sh["tokens"], cache_sh),
-                                 donate_argnums=(2,))
-                else:
-                    fn = jax.jit(st.decode_fn(), donate_argnums=(2,))
-                lowered = fn.lower(abstract["params"],
-                                   abstract["batch"]["tokens"],
-                                   abstract["cache"])
-            compiled = lowered.compile()
-        compile_s = time.time() - t0
+                        cache_sh = tree_map_pspec(
+                            lambda s: NamedSharding(st.mesh, s.pspec),
+                            st.cache_schema())
+                        fn = jax.jit(st.decode_fn(),
+                                     in_shardings=(param_sh,
+                                                   batch_sh["tokens"],
+                                                   cache_sh),
+                                     donate_argnums=(2,))
+                    else:
+                        fn = jax.jit(st.decode_fn(), donate_argnums=(2,))
+                    lowered = fn.lower(abstract["params"],
+                                       abstract["batch"]["tokens"],
+                                       abstract["cache"])
+            with trc.span("xla.compile", arch=st.cfg.name, kind=kind):
+                compiled = lowered.compile()
+        compile_s = time.perf_counter() - t0
 
         cost = compiled.cost_analysis()
         mem = compiled.memory_analysis()

@@ -118,43 +118,68 @@ class Workflow:
                 self.options_from_knobs = _from_fmts
 
     def run_once(self, knobs: Dict[str, Any], it: int = 0) -> WorkflowRecord:
-        """One loop iteration — the single code path for every target."""
-        # Stage 1 — design / train / quantize
-        params, design, _ = self.train_fn(knobs)
-        # Stage 2 — translate + estimate via the target registry
-        tgt = get_target(self.target)
-        opts_fn = self.options_from_knobs or tgt.options_from_knobs
-        options = opts_fn(knobs)
-        fn, args, model_flops = self.step_builder(knobs, params)
-        if self.stepper_builder is not None:
-            st = self.stepper_builder(knobs)
-            syn, dep = self.creator.translate(
-                st, target=tgt, options=options, params=params,
-                model_flops=model_flops)
-        elif getattr(tgt, "requires_stepper", False):
-            raise ValueError(f"target {tgt.name!r} needs stepper_builder "
-                             f"(the model to lower)")
-        else:
-            syn = self._synth_from_fn(fn, args, model_flops,
-                                      model=design.model)
-            dep = XLADeployment(fn=None, hw=self.creator.hw)
-        # Stage 3 — deploy + measure through the uniform Deployment artifact.
-        # Host-executed targets time the jitted step fn; self-executing
-        # targets (the RTL emulator) ignore the bind and measure themselves.
-        dep = dep.bind_step(jax.jit(fn)) if fn is not None else dep
-        meas = dep.measure(args, model=design.model,
-                           model_flops=model_flops)
-        # Verify stage — the Elastic Node half of the paper's loop: the
-        # same uniform Deployment API, so every target is conformance-
-        # checked the same way the reference design is.
-        conf = None
-        if self.verify:
-            conf = dep.verify(args, model=design.model,
-                              model_flops=model_flops)
-        rec = WorkflowRecord(
-            iteration=it, knobs=dict(knobs), design=design, synthesis=syn,
-            measurement=meas, est_vs_meas=compare(syn, meas),
-            satisfied=False, conformance=conf)
+        """One loop iteration — the single code path for every target.
+
+        Instrumented (DESIGN.md §11): the iteration runs under a
+        ``workflow.run_once`` span with one child per stage
+        (``workflow.stage1`` … ``workflow.stage3``, ``workflow.verify``),
+        knobs attached as attrs — so a :class:`~repro.obs.RunTrace`
+        captured around this call decomposes exactly where the loop spends
+        its time, down to the emulator dispatches nested inside stage 3.
+        """
+        from repro.obs import get_tracer
+
+        trc = get_tracer()
+        with trc.span("workflow.run_once", iteration=it, target=self.target,
+                      **{f"knob.{k}": v for k, v in knobs.items()}):
+            # Stage 1 — design / train / quantize
+            with trc.span("workflow.stage1", stage="design/train/quantize"):
+                params, design, _ = self.train_fn(knobs)
+            # Stage 2 — translate + estimate via the target registry
+            with trc.span("workflow.stage2",
+                          stage="translate/estimate") as s2:
+                tgt = get_target(self.target)
+                opts_fn = self.options_from_knobs or tgt.options_from_knobs
+                options = opts_fn(knobs)
+                fn, args, model_flops = self.step_builder(knobs, params)
+                if self.stepper_builder is not None:
+                    st = self.stepper_builder(knobs)
+                    syn, dep = self.creator.translate(
+                        st, target=tgt, options=options, params=params,
+                        model_flops=model_flops)
+                elif getattr(tgt, "requires_stepper", False):
+                    raise ValueError(f"target {tgt.name!r} needs "
+                                     f"stepper_builder (the model to lower)")
+                else:
+                    syn = self._synth_from_fn(fn, args, model_flops,
+                                              model=design.model)
+                    dep = XLADeployment(fn=None, hw=self.creator.hw)
+                s2.set_attrs(model=design.model,
+                             compile_seconds=syn.compile_seconds)
+            # Stage 3 — deploy + measure through the uniform Deployment
+            # artifact. Host-executed targets time the jitted step fn;
+            # self-executing targets (the RTL emulator) ignore the bind
+            # and measure themselves.
+            with trc.span("workflow.stage3", stage="deploy/measure") as s3:
+                dep = dep.bind_step(jax.jit(fn)) if fn is not None else dep
+                meas = dep.measure(args, model=design.model,
+                                   model_flops=model_flops)
+                s3.set_attrs(latency_s=meas.latency_s,
+                             latency_p99_s=meas.latency_p99_s)
+            # Verify stage — the Elastic Node half of the paper's loop: the
+            # same uniform Deployment API, so every target is conformance-
+            # checked the same way the reference design is.
+            conf = None
+            if self.verify:
+                with trc.span("workflow.verify") as sv:
+                    conf = dep.verify(args, model=design.model,
+                                      model_flops=model_flops)
+                    sv.set_attrs(passed=conf.passed)
+            rec = WorkflowRecord(
+                iteration=it, knobs=dict(knobs), design=design,
+                synthesis=syn, measurement=meas,
+                est_vs_meas=compare(syn, meas), satisfied=False,
+                conformance=conf)
         self.history.append(rec)
         return rec
 
@@ -162,14 +187,18 @@ class Workflow:
                        arch: Optional[str] = None) -> SynthesisReport:
         from repro.energy.meter import meter_channels
         from repro.energy.roofline import roofline
+        from repro.obs import get_tracer
         import time
 
         arch = arch or model                 # attribute history to the model
-        t0 = time.time()
-        lowered = jax.jit(fn).lower(*jax.tree.map(
-            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args))
-        compiled = lowered.compile()
-        dt = time.time() - t0
+        trc = get_tracer()
+        t0 = time.perf_counter()             # monotonic: this is a duration
+        with trc.span("xla.lower", arch=arch, kind="step_fn"):
+            lowered = jax.jit(fn).lower(*jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args))
+        with trc.span("xla.compile", arch=arch, kind="step_fn"):
+            compiled = lowered.compile()
+        dt = time.perf_counter() - t0
         cost = compiled.cost_analysis()
         mem = compiled.memory_analysis()
         hlo = compiled.as_text()

@@ -47,7 +47,7 @@ def _compile_cell(cfg, shape, mcfg, mesh, par):
     from repro.optim.adamw import opt_state_schema
 
     st = Stepper(cfg, shape, mcfg, par, mesh=mesh)
-    t0 = time.time()
+    t0 = time.perf_counter()
     param_sh = st.shardings(st.schema)
     bspecs = batch_pspecs(cfg, shape, mcfg)
     batch_sh = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
@@ -73,7 +73,7 @@ def _compile_cell(cfg, shape, mcfg, mesh, par):
 
         return (normalize_cost(compiled.cost_analysis()),
                 compiled.memory_analysis(),
-                compiled.as_text(), time.time() - t0)
+                compiled.as_text(), time.perf_counter() - t0)
 
     with mesh:
         if shape.kind == "train":
@@ -96,7 +96,7 @@ def _compile_cell(cfg, shape, mcfg, mesh, par):
             lowered = fn.lower(abstract["params"], abstract["batch"]["tokens"],
                                abstract["cache"])
         compiled = lowered.compile()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     from repro.energy.roofline import normalize_cost
 
     return (normalize_cost(compiled.cost_analysis()),

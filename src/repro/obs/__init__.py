@@ -1,0 +1,29 @@
+"""Workflow-wide observability: spans, counters, latency histograms
+(DESIGN.md §11).
+
+Dependency-free tracing + metrics threaded through every pipeline layer —
+the telemetry substrate the serving runtime and the DSE engine consume:
+
+* :mod:`repro.obs.trace`   — nested context-manager spans on a monotonic
+  (injectable) clock, a process-default :class:`Tracer` that is a no-op
+  until enabled, exporters for Chrome trace-event JSON (Perfetto) and
+  JSONL;
+* :mod:`repro.obs.metrics` — named counters / gauges / histograms with
+  p50/p95/p99 summaries;
+* :mod:`repro.obs.export`  — the :class:`RunTrace` artifact written next
+  to ``Deployment.save`` bundles, and :class:`capture`, the one-liner that
+  scopes an enabled tracer + fresh registry to a ``with`` body.
+
+Overhead contract: with tracing disabled (the default) every instrumented
+site costs one function call and one attribute check — the fused-emulator
+throughput trajectory (``BENCH_rtl_emulator.json``) is the regression
+guard.
+"""
+from repro.obs.export import RunTrace, capture  # noqa: F401
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry, get_metrics, percentile,
+                               set_metrics)
+from repro.obs.trace import (Span, Tracer, ancestors,  # noqa: F401
+                             children_of, find_spans, from_chrome_trace,
+                             get_tracer, set_tracer, span, span_tree,
+                             to_chrome_trace, to_jsonl)

@@ -127,14 +127,26 @@ class RTLExecutable(Deployment):
         replay the emulator's compiled program — no retrace, no weight
         re-upload — so the unified ``n_runs`` default is cheap here too.
         """
+        import time
+
+        from repro.obs import get_metrics, get_tracer, percentile
+
         x = args[-1] if isinstance(args, (tuple, list)) else args
         hw = hw or self.hw
         clock = hw.clock_hz or 100e6
         rr = estimate(self.graph, clock_hz=clock)
         n_runs = max(1, n_runs)
-        for _ in range(n_runs):                 # actually execute the design
-            out = self(x)
-        jax.block_until_ready(out)
+        samples = []
+        with get_tracer().span("rtl.measure", model=model, n_runs=n_runs):
+            jax.block_until_ready(self(x))      # warm: compile/trace once
+            for _ in range(n_runs):             # actually execute the design
+                t0 = time.perf_counter()
+                out = self(x)
+                jax.block_until_ready(out)
+                samples.append(time.perf_counter() - t0)
+        hist = get_metrics().histogram("measure.latency_s.rtl")
+        for s in samples:
+            hist.observe(s)
         latency = rr.latency_s
         energy = hw.energy_j(latency, duty=rr.duty)
         return MeasurementReport(
@@ -143,7 +155,12 @@ class RTLExecutable(Deployment):
             power_w=energy / latency if latency else 0.0,
             energy_j=energy,
             gop_per_j=(model_flops / 1e9) / energy if energy else 0.0,
-            n_runs=n_runs, target=self.target)
+            n_runs=n_runs, target=self.target,
+            # the fabric latency above is the cycle model (deterministic);
+            # the percentiles characterize the per-run distribution of the
+            # executing proxy — what a tail-latency acceptance gate reads
+            latency_p50_s=percentile(samples, 50),
+            latency_p99_s=percentile(samples, 99))
 
     def save(self, build_dir: str) -> None:
         from repro.rtl.emit import write_artifacts
@@ -202,12 +219,18 @@ def translate_rtl(cfg: ModelConfig, params, *,
                   emulator_mode: str = "fused",
                   w_fmt_overrides=None):
     """Returns (SynthesisReport, RTLExecutable)."""
-    graph = lower_model(cfg, params, w_fmt=w_fmt, act_fmt=act_fmt,
-                        state_fmt=state_fmt,
-                        w_fmt_overrides=w_fmt_overrides)
-    artifacts = emit_graph(graph)
-    rep = synthesize(graph, hw=hw, model_flops=model_flops,
-                     n_artifacts=len(artifacts))
+    from repro.obs import get_tracer
+
+    trc = get_tracer()
+    with trc.span("rtl.lower", arch=cfg.name):
+        graph = lower_model(cfg, params, w_fmt=w_fmt, act_fmt=act_fmt,
+                            state_fmt=state_fmt,
+                            w_fmt_overrides=w_fmt_overrides)
+    with trc.span("rtl.emit", arch=cfg.name):
+        artifacts = emit_graph(graph)
+    with trc.span("rtl.synthesize", arch=cfg.name):
+        rep = synthesize(graph, hw=hw, model_flops=model_flops,
+                         n_artifacts=len(artifacts))
     return rep, RTLExecutable(graph=graph, artifacts=artifacts, hw=hw,
                               emulator_mode=emulator_mode)
 

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import use_interpret
+from repro.obs import get_metrics, get_tracer
 from repro.quant.fixedpoint import fxp_to_int
 # mac primitives live in the op library now; re-exported for compatibility
 from repro.rtl.oplib import (_mac_int_jnp, get_template,  # noqa: F401
@@ -101,6 +102,14 @@ class RTLEmulator:
         self._programs: "OrderedDict" = OrderedDict()
         self._max_programs = max_programs
         self.trace_count = 0             # how many times the walk was traced
+        # observability (DESIGN.md §11): cache behavior + dispatch counts
+        # are plain int attrs (always on, ~free) mirrored into the process
+        # metrics registry; per-dispatch spans only fire when a tracer is
+        # enabled (one attribute check on the hot path).
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.cache_evictions = 0
+        self.dispatch_counts: Dict[str, int] = {}
 
     # -- execution context handed to the templates ---------------------------
     def prepared(self, name: str) -> Dict:
@@ -121,10 +130,20 @@ class RTLEmulator:
         return env
 
     def _program(self, shape, dtype):
-        """The compiled graph walk for one (shape, dtype), LRU-cached."""
+        """The compiled graph walk for one (shape, dtype), LRU-cached.
+
+        Returns ``(program, cache_hit)`` and keeps the cache observable:
+        ``cache_hits``/``cache_misses``/``cache_evictions`` on the instance
+        plus the matching ``rtl.emulator.cache_*`` process counters.
+        """
         key = (tuple(shape), jnp.dtype(dtype).name)
         prog = self._programs.pop(key, None)
+        hit = prog is not None
+        mx = get_metrics()
         if prog is None:
+            self.cache_misses += 1
+            mx.counter("rtl.emulator.cache_miss").inc()
+
             def walk(x_int):
                 self.trace_count += 1        # python side effect: trace-time
                 return self._execute(x_int, mode=self.mode)
@@ -132,8 +151,20 @@ class RTLEmulator:
             prog = jax.jit(walk)
             while len(self._programs) >= self._max_programs:
                 self._programs.popitem(last=False)
+                self.cache_evictions += 1
+                mx.counter("rtl.emulator.cache_evict").inc()
+        else:
+            self.cache_hits += 1
+            mx.counter("rtl.emulator.cache_hit").inc()
         self._programs[key] = prog           # (re)insert most-recently-used
-        return prog
+        return prog, hit
+
+    def cache_stats(self) -> Dict[str, int]:
+        """Program-cache behavior + per-mode dispatch counts, one dict."""
+        return {"hits": self.cache_hits, "misses": self.cache_misses,
+                "evictions": self.cache_evictions,
+                "retraces": self.trace_count,
+                "dispatches": dict(self.dispatch_counts)}
 
     def _result(self, env: Dict[str, jax.Array]) -> EmulationResult:
         out_edge = self.graph.edges[self.graph.outputs[0]]
@@ -143,9 +174,22 @@ class RTLEmulator:
                                / out_edge.fmt.scale,
                                trace=env)
 
+    def _count_dispatch(self, mode: str) -> None:
+        self.dispatch_counts[mode] = self.dispatch_counts.get(mode, 0) + 1
+        get_metrics().counter(f"rtl.emulator.dispatch.{mode}").inc()
+
     def run_int(self, x_int: jax.Array) -> EmulationResult:
         x_int = jnp.asarray(x_int)
-        env = self._program(x_int.shape, x_int.dtype)(x_int)
+        prog = self._program(x_int.shape, x_int.dtype)
+        self._count_dispatch(self.mode)
+        trc = get_tracer()
+        if trc.enabled:                      # hoisted guard: skip the attrs
+            with trc.span("rtl.emulator.dispatch", mode=self.mode,
+                          shape=str(tuple(x_int.shape)), cached=prog[1],
+                          design=self.graph.name):
+                env = prog[0](x_int)
+        else:
+            env = prog[0](x_int)
         return self._result(env)
 
     def run(self, x: jax.Array) -> EmulationResult:
@@ -190,7 +234,10 @@ class RTLEmulator:
         overhead, not upload traffic).
         """
         mode = "jnp" if self.mode == "jnp" else "pallas"
-        return self._result(self._execute(jnp.asarray(x_int), mode=mode))
+        self._count_dispatch("per_step")
+        with get_tracer().span("rtl.emulator.dispatch", mode="per_step",
+                               design=self.graph.name):
+            return self._result(self._execute(jnp.asarray(x_int), mode=mode))
 
     def run_per_step(self, x: jax.Array) -> EmulationResult:
         in_fmt = self.graph.edges[self.graph.inputs[0]].fmt

@@ -13,17 +13,18 @@ pad is a no-op. Greedy or temperature sampling.
 """
 from __future__ import annotations
 
-import dataclasses
+import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import MeshConfig, ModelConfig, ParallelismConfig, ShapeConfig
+from repro.core.types import MeshConfig, ModelConfig, ParallelismConfig
 from repro.model.lm import make_decode_step, make_prefill_step
 from repro.model.transformer import pad_cache
+from repro.obs import MetricsRegistry, get_tracer
 
 
 @dataclass
@@ -42,12 +43,46 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # per-request latency instrumentation (server clock; None until set)
+    t_submit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+@dataclass
+class ServerStats:
+    """What one drain actually did — built from the server's metrics so
+    callers stop re-deriving it from the request list.
+
+    ``ttft_s`` / ``latency_s`` are histogram summaries
+    (count/mean/p50/p95/p99...): time-to-first-token is submit → first
+    token out of prefill; total latency is submit → retire.
+    """
+
+    ticks: int = 0
+    submitted: int = 0
+    admitted: int = 0
+    retired: int = 0
+    max_queue_depth: int = 0
+    max_slots_busy: int = 0
+    ttft_s: Dict[str, float] = field(default_factory=dict)
+    latency_s: Dict[str, float] = field(default_factory=dict)
+
+
+class DrainResult(list):
+    """The retired requests (a plain list, as before) with the drain's
+    :class:`ServerStats` riding along as ``.stats``."""
+
+    def __init__(self, requests, stats: ServerStats):
+        super().__init__(requests)
+        self.stats = stats
 
 
 class Server:
     def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig,
                  mesh_cfg: MeshConfig, par: Optional[ParallelismConfig] = None,
-                 mesh=None):
+                 mesh=None, metrics: Optional[MetricsRegistry] = None,
+                 clock=time.perf_counter):
         self.cfg = cfg
         self.scfg = scfg
         self.params = params
@@ -62,14 +97,21 @@ class Server:
         self._queue: List[Request] = []
         self._next_rid = 0
         self.requests: Dict[int, Request] = {}
+        # observability: the server owns its registry (injectable for
+        # tests); the clock is injectable too so latency histograms are
+        # deterministic under test.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.clock = clock
 
     # ------------------------------------------------------------------ #
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, list(prompt), max_new_tokens)
+        req = Request(rid, list(prompt), max_new_tokens,
+                      t_submit=self.clock())
         self._queue.append(req)
         self.requests[rid] = req
+        self.metrics.counter("server.submitted").inc()
         return rid
 
     def _free_slots(self) -> List[int]:
@@ -81,10 +123,17 @@ class Server:
                 break
             req = self._queue.pop(0)
             tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, cache = self._prefill(self.params, {"tokens": tokens})
-            cache = pad_cache(cache, self.scfg.max_len)
-            tok = self._sample(np.asarray(logits))
+            with get_tracer().span("server.prefill", rid=req.rid,
+                                   prompt_len=len(req.prompt)):
+                logits, cache = self._prefill(self.params,
+                                              {"tokens": tokens})
+                cache = pad_cache(cache, self.scfg.max_len)
+                tok = self._sample(np.asarray(logits))
             req.out_tokens.append(int(tok[0]))
+            req.t_first_token = self.clock()
+            self.metrics.counter("server.admitted").inc()
+            self.metrics.histogram("server.ttft_s").observe(
+                req.t_first_token - req.t_submit)
             self._install(slot, req, cache, tok)
 
     def _install(self, slot: int, req, cache, tok) -> None:
@@ -113,29 +162,82 @@ class Server:
 
     # ------------------------------------------------------------------ #
     def step(self) -> None:
-        """One server tick: admit new work, decode the pool, retire done."""
-        self._admit()
-        if all(s is None for s in self._slots):
-            return
-        logits, self._cache = self._decode(
-            self.params, jnp.asarray(self._last_tok), self._cache)
-        toks = self._sample(np.asarray(logits))
-        for i, req in enumerate(self._slots):
-            if req is None:
-                continue
-            t = int(toks[i])
-            req.out_tokens.append(t)
-            self._last_tok[i, 0] = t
-            if (t == self.scfg.eos_token
-                    or len(req.out_tokens) >= req.max_new_tokens):
-                req.done = True
-                self._slots[i] = None
+        """One server tick: admit new work, decode the pool, retire done.
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        Each tick records queue depth and slot occupancy (gauges track the
+        max) plus admit/retire counters; every retiring request observes
+        its total submit→retire latency.
+        """
+        mx = self.metrics
+        mx.counter("server.ticks").inc()
+        mx.gauge("server.queue_depth").set(len(self._queue))
+        trc = get_tracer()
+        with trc.span("server.tick", queue_depth=len(self._queue),
+                      slots_busy=self._busy_slots()):
+            self._admit()
+            mx.gauge("server.slots_busy").set(self._busy_slots())
+            if all(s is None for s in self._slots):
+                return
+            with trc.span("server.decode", slots_busy=self._busy_slots()):
+                logits, self._cache = self._decode(
+                    self.params, jnp.asarray(self._last_tok), self._cache)
+                toks = self._sample(np.asarray(logits))
+            for i, req in enumerate(self._slots):
+                if req is None:
+                    continue
+                t = int(toks[i])
+                req.out_tokens.append(t)
+                self._last_tok[i, 0] = t
+                if (t == self.scfg.eos_token
+                        or len(req.out_tokens) >= req.max_new_tokens):
+                    req.done = True
+                    req.t_done = self.clock()
+                    self._slots[i] = None
+                    mx.counter("server.retired").inc()
+                    mx.histogram("server.latency_s").observe(
+                        req.t_done - req.t_submit)
+
+    def _busy_slots(self) -> int:
+        return sum(1 for s in self._slots if s is not None)
+
+    def stats(self) -> ServerStats:
+        """The drain summary, straight from the metrics registry."""
+        mx = self.metrics
+
+        def _count(name):
+            return mx.counter(name).value
+
+        def _gmax(name):
+            g = mx.gauge(name)
+            return int(g.max) if g.max is not None else 0
+
+        return ServerStats(
+            ticks=_count("server.ticks"),
+            submitted=_count("server.submitted"),
+            admitted=_count("server.admitted"),
+            retired=_count("server.retired"),
+            max_queue_depth=_gmax("server.queue_depth"),
+            max_slots_busy=_gmax("server.slots_busy"),
+            ttft_s=mx.histogram("server.ttft_s").summary(),
+            latency_s=mx.histogram("server.latency_s").summary())
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> DrainResult:
+        """Tick until queue and slots are empty. Returns the retired
+        requests (list-compatible, as before) with ``.stats`` attached;
+        tripping ``max_ticks`` raises with the live queue/slot state so a
+        wedged drain is diagnosable from the message alone."""
         ticks = 0
         while self._queue or any(s is not None for s in self._slots):
             self.step()
             ticks += 1
             if ticks > max_ticks:
-                raise RuntimeError("server did not drain")
-        return sorted(self.requests.values(), key=lambda r: r.rid)
+                busy = [(i, s.rid, len(s.out_tokens), s.max_new_tokens)
+                        for i, s in enumerate(self._slots) if s is not None]
+                raise RuntimeError(
+                    f"server did not drain within max_ticks={max_ticks}: "
+                    f"{len(self._queue)} queued "
+                    f"(rids {[r.rid for r in self._queue[:8]]}), "
+                    f"{len(busy)} slots busy "
+                    f"(slot, rid, out/max: {busy}); stats={self.stats()}")
+        return DrainResult(sorted(self.requests.values(),
+                                  key=lambda r: r.rid), self.stats())

@@ -97,11 +97,11 @@ class Trainer:
             if self.injector is not None:
                 self.injector.maybe_fail(step)
             batch = self._batch(step)
-            t0 = time.time()
+            t0 = time.perf_counter()
             params, opt, m = self._step_fn(state["params"], state["opt"],
                                            batch)
             jax.block_until_ready(m["loss"])
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             state = {"params": params, "opt": opt}
             self._watch_stragglers(dt)
             if step % self.cfg.log_every == 0 or step == self.cfg.total_steps - 1:

@@ -124,58 +124,81 @@ def run_conformance(graph, vectors: Optional[VectorSet] = None, *,
     never-stored set out of that check). ``extra_stimulus`` appends
     caller-provided int code rows (e.g. fuzz samples from a template's
     ``sample_inputs`` hook).
+
+    Each differential sub-check runs in its own span (``verify.mode`` per
+    execution mode, ``verify.oracle``, ``verify.golden_replay``) so a
+    failing mode is attributable in the captured trace, not just the
+    report.
     """
+    from repro.obs import get_tracer
     from repro.rtl.emulator import outputs_by_mode
 
+    trc = get_tracer()
     rep = ConformanceReport(design=graph.name, target=target,
                             modes=tuple(modes))
-    if replay_golden is None:
-        replay_golden = vectors is not None
-    if vectors is None:
-        vectors = generate_vectors(graph)
-    stim = vectors.stimulus
-    if extra_stimulus is not None:
-        stim = np.concatenate([stim, np.asarray(extra_stimulus, np.int32)],
-                              axis=0)
-    rep.n_vectors = int(stim.shape[0])
+    with trc.span("verify.conformance", design=graph.name,
+                  target=target) as root:
+        if replay_golden is None:
+            replay_golden = vectors is not None
+        if vectors is None:
+            with trc.span("verify.generate_vectors", design=graph.name):
+                vectors = generate_vectors(graph)
+        stim = vectors.stimulus
+        if extra_stimulus is not None:
+            stim = np.concatenate([stim,
+                                   np.asarray(extra_stimulus, np.int32)],
+                                  axis=0)
+        rep.n_vectors = int(stim.shape[0])
 
-    # 1 — every execution mode must agree integer-for-integer
-    outs = outputs_by_mode(graph, stim, modes=modes)
-    base_mode = rep.modes[0]
-    base = outs[base_mode]
-    for m in rep.modes[1:]:
-        diff = int(np.max(np.abs(outs[m] - base))) if base.size else 0
-        rep.mode_max_diff[f"{base_mode}-vs-{m}"] = diff
-        if diff != 0:
-            rep.modes_bit_exact = False
-            rep.notes.append(f"mode {m!r} diverges from {base_mode!r} by "
-                             f"up to {diff} codes")
+        # 1 — every execution mode must agree integer-for-integer
+        outs = {}
+        for m in rep.modes:
+            with trc.span("verify.mode", mode=m, design=graph.name):
+                outs[m] = outputs_by_mode(graph, stim, modes=(m,))[m]
+        base_mode = rep.modes[0]
+        base = outs[base_mode]
+        for m in rep.modes[1:]:
+            diff = int(np.max(np.abs(outs[m] - base))) if base.size else 0
+            rep.mode_max_diff[f"{base_mode}-vs-{m}"] = diff
+            if diff != 0:
+                rep.modes_bit_exact = False
+                rep.notes.append(f"mode {m!r} diverges from {base_mode!r} "
+                                 f"by up to {diff} codes")
 
-    # 2 — int vs float oracle, within the declared LSB budget
-    ref_int = oracle_codes(graph, stim.astype(np.float32)
-                           / vectors.in_fmt.scale)
-    rep.error_budget_lsb = graph_error_budget_lsb(graph)
-    rep.oracle_max_lsb = float(np.max(np.abs(base - ref_int))) \
-        if base.size else 0.0
-    rep.oracle_within_budget = rep.oracle_max_lsb <= rep.error_budget_lsb
-    if not rep.oracle_within_budget:
-        rep.notes.append(
-            f"int output deviates from the fxp_quantize oracle by "
-            f"{rep.oracle_max_lsb:g} LSB > budget {rep.error_budget_lsb}")
-
-    # 3 — golden replay: stored responses must still be what the design does
-    if replay_golden:
-        n = vectors.response.shape[0]
-        rep.golden_match = bool(np.array_equal(base[:n],
-                                               vectors.response))
-        if not rep.golden_match:
-            bad = np.argwhere(base[:n] != vectors.response)
+        # 2 — int vs float oracle, within the declared LSB budget
+        with trc.span("verify.oracle", design=graph.name) as so:
+            ref_int = oracle_codes(graph, stim.astype(np.float32)
+                                   / vectors.in_fmt.scale)
+            rep.error_budget_lsb = graph_error_budget_lsb(graph)
+            rep.oracle_max_lsb = float(np.max(np.abs(base - ref_int))) \
+                if base.size else 0.0
+            rep.oracle_within_budget = \
+                rep.oracle_max_lsb <= rep.error_budget_lsb
+            so.set_attrs(max_lsb=rep.oracle_max_lsb,
+                         budget=rep.error_budget_lsb)
+        if not rep.oracle_within_budget:
             rep.notes.append(
-                f"stored golden responses mismatch at {len(bad)} positions "
-                f"(first {bad[0].tolist()})")
+                f"int output deviates from the fxp_quantize oracle by "
+                f"{rep.oracle_max_lsb:g} LSB > budget "
+                f"{rep.error_budget_lsb}")
 
-    rep.passed = (rep.modes_bit_exact and rep.oracle_within_budget
-                  and rep.golden_match is not False)
+        # 3 — golden replay: stored responses must still be what the
+        # design does
+        if replay_golden:
+            with trc.span("verify.golden_replay", design=graph.name) as sg:
+                n = vectors.response.shape[0]
+                rep.golden_match = bool(np.array_equal(base[:n],
+                                                       vectors.response))
+                sg.set_attrs(match=rep.golden_match)
+            if not rep.golden_match:
+                bad = np.argwhere(base[:n] != vectors.response)
+                rep.notes.append(
+                    f"stored golden responses mismatch at {len(bad)} "
+                    f"positions (first {bad[0].tolist()})")
+
+        rep.passed = (rep.modes_bit_exact and rep.oracle_within_budget
+                      and rep.golden_match is not False)
+        root.set_attrs(passed=rep.passed)
     return rep
 
 

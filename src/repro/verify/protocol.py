@@ -95,17 +95,29 @@ def _invoke(dep, args):
 def run_protocol(dep, args, *, model: str, model_flops: float,
                  hw=None, protocol: Optional[MeasurementProtocol] = None
                  ) -> ProtocolReport:
-    """Warmup → measure → band-check one Deployment. See module docstring."""
+    """Warmup → measure → band-check one Deployment. See module docstring.
+
+    Runs under a ``verify.protocol`` span with the warmup and measurement
+    phases as children, so the protocol's cost is attributable in a
+    captured trace and a band failure points at a visible interval.
+    """
     import jax
 
+    from repro.obs import get_tracer
+
+    trc = get_tracer()
     proto = protocol or MeasurementProtocol()
-    out = None
-    for _ in range(max(0, proto.warmup)):
-        out = _invoke(dep, args)
-    if out is not None:                  # drain before the timed region
-        jax.block_until_ready(out)
-    meas = dep.measure(args, model=model, model_flops=model_flops,
-                       n_runs=proto.n_runs, hw=hw)
+    with trc.span("verify.protocol", model=model,
+                  target=getattr(dep, "target", "")):
+        with trc.span("verify.protocol.warmup", n=max(0, proto.warmup)):
+            out = None
+            for _ in range(max(0, proto.warmup)):
+                out = _invoke(dep, args)
+            if out is not None:          # drain before the timed region
+                jax.block_until_ready(out)
+        with trc.span("verify.protocol.measure", n_runs=proto.n_runs):
+            meas = dep.measure(args, model=model, model_flops=model_flops,
+                               n_runs=proto.n_runs, hw=hw)
     rep = ProtocolReport(
         target=meas.target, platform=meas.platform, warmup=proto.warmup,
         n_runs=meas.n_runs, latency_s=meas.latency_s, energy_j=meas.energy_j,

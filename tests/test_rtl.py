@@ -725,3 +725,48 @@ def test_rtl_options_w_fmt_overrides():
     x = jax.random.normal(jax.random.PRNGKey(2),
                           (2, cfg.conv1d.seq_len, cfg.conv1d.channels))
     assert_bit_exact(g, x, mode="jnp")
+
+
+def test_emulator_cache_stats_and_dispatch_counters():
+    """cache_stats() mirrors trace_count and splits hits/misses/evictions;
+    dispatch spans carry mode + cached flag when a tracer is installed."""
+    from repro import obs
+
+    g = _lstm_graph()
+    em = RTLEmulator(g, max_programs=2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 6, 1))
+    with obs.capture("emu") as cap:
+        em.run(x[:1])                       # miss
+        em.run(x[:1])                       # hit
+        em.run(x[:2])                       # miss
+        em.run(x[:3])                       # miss -> evicts (1,6,1)
+        em.run(x[:1])                       # miss again (was evicted)
+    st = em.cache_stats()
+    assert st["misses"] == st["retraces"] == em.trace_count == 4
+    assert st["hits"] == 1
+    assert st["evictions"] >= 1
+    assert st["dispatches"]["fused"] == 5
+    # spans: one per dispatch, cached flag tracks hit/miss
+    ds = obs.find_spans(cap.trace.spans, "rtl.emulator.dispatch")
+    assert len(ds) == 5
+    assert [d.attrs["cached"] for d in ds] == [False, True, False, False,
+                                               False]
+    assert all(d.attrs["mode"] == "fused" for d in ds)
+    # counters mirrored into the captured registry
+    mx = cap.trace.metrics
+    assert mx["rtl.emulator.cache_miss"]["value"] == 4
+    assert mx["rtl.emulator.cache_hit"]["value"] == 1
+
+
+def test_measurement_report_percentiles_rtl():
+    """RTL measure keeps per-run samples: latency_s stays the deterministic
+    cycle model while p50/p99 characterize the executing proxy."""
+    cr = Creator(hw=XC7S15)
+    st_ = cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
+    _, exe = cr.translate(st_, target="rtl")
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 1))
+    rep = exe.measure((x,), model="elastic-lstm", model_flops=1e6, n_runs=7)
+    assert rep.n_runs == 7
+    assert 0 < rep.latency_p50_s <= rep.latency_p99_s
+    # the fabric latency is the cycle model, not host wall-clock
+    assert rep.latency_s == pytest.approx(exe.cycles / 100e6, rel=1e-6)

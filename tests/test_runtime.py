@@ -78,3 +78,53 @@ def test_server_rwkv_state_cache(par_f32):
     srv.submit(list(range(4, 12)), max_new_tokens=5)
     reqs = srv.run_until_drained()
     assert all(len(r.out_tokens) == 5 for r in reqs)
+
+
+def test_server_drain_stats(par_f32):
+    """run_until_drained stays list-compatible but carries ServerStats:
+    counters, occupancy maxima, and ttft/total-latency histograms."""
+    cfg = get_config("qwen3-32b", smoke=True)
+    st = Stepper(cfg, ShapeConfig("p", "prefill", 16, 1), SMOKE_MESH, par_f32)
+    params, _ = st.init()
+    # deterministic clock so latency histograms are exact under test
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.5
+        return t[0]
+
+    srv = Server(cfg, params, ServerConfig(batch_slots=2, max_len=48,
+                                           eos_token=-1), SMOKE_MESH,
+                 par_f32, clock=clock)
+    for i in range(4):
+        srv.submit(list(range(5 + i, 13 + i)), max_new_tokens=4)
+    reqs = srv.run_until_drained()
+    assert isinstance(reqs, list) and len(reqs) == 4   # compat: still a list
+    s = reqs.stats
+    assert s.submitted == s.admitted == s.retired == 4
+    assert s.ticks > 0
+    assert s.max_queue_depth == 4          # sampled at tick start, pre-admit
+    assert s.max_slots_busy == 2
+    assert s.ttft_s["count"] == 4 and s.ttft_s["p50"] > 0
+    assert s.latency_s["count"] == 4
+    # total latency dominates ttft per request (same clock)
+    assert s.latency_s["mean"] > s.ttft_s["mean"]
+    for r in reqs:
+        assert r.t_submit < r.t_first_token < r.t_done
+
+
+def test_server_drain_limit_error_names_state(par_f32):
+    """Tripping max_ticks raises with the live queue/slot/stats state."""
+    cfg = get_config("qwen3-32b", smoke=True)
+    st = Stepper(cfg, ShapeConfig("p", "prefill", 16, 1), SMOKE_MESH, par_f32)
+    params, _ = st.init()
+    srv = Server(cfg, params, ServerConfig(batch_slots=1, max_len=48,
+                                           eos_token=-1), SMOKE_MESH,
+                 par_f32)
+    srv.submit(list(range(5, 13)), max_new_tokens=8)
+    srv.submit(list(range(6, 14)), max_new_tokens=8)
+    with pytest.raises(RuntimeError) as ei:
+        srv.run_until_drained(max_ticks=2)
+    msg = str(ei.value)
+    assert "max_ticks=2" in msg
+    assert "slots busy" in msg and "stats=" in msg

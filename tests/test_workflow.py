@@ -133,3 +133,75 @@ def test_workflow_single_path_over_targets(target):
     # satellite: _synth_from_fn threads the real model name (no more "wf")
     assert rec.synthesis.model == "elastic-lstm"
     assert "latency_rel_err" in rec.est_vs_meas
+
+
+def test_workflow_run_once_emits_span_tree():
+    """The observability tentpole, end to end: an RTL run_once under
+    obs.capture decomposes into stage1 -> stage2 -> stage3 (-> verify) with
+    emulator dispatch spans nested inside, and the measurement surfaces a
+    non-degenerate latency distribution (p50/p99)."""
+    from repro import obs
+    from repro.core.types import SHAPES_LSTM
+    from repro.energy.hw import XC7S15
+    from repro.model.lstm import lstm_apply
+
+    cfg = get_config("elastic-lstm")
+
+    def train(knobs):
+        params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+        return params, DesignReport(model="elastic-lstm", train_loss=0.0,
+                                    eval_loss=0.0), None
+
+    def steps(knobs, params):
+        x = jnp.asarray(traffic_flow_batch(TrafficConfig(batch=1), 0)["x"])
+        fn = lambda p, xx: lstm_apply(p, xx, cfg)[0]
+        return fn, (params, x), float(lstm_flops(cfg))
+
+    creator = Creator(hw=XC7S15)
+    wf = Workflow(creator=creator, train_fn=train, step_builder=steps,
+                  stepper_builder=lambda k: creator.build(
+                      cfg, SHAPES_LSTM["infer_1"]),
+                  target="rtl", verify=True)
+    with obs.capture("wf") as cap:
+        rec = wf.run_once({"bits": 8, "frac": 6})
+
+    spans = cap.trace.spans
+    root = obs.find_spans(spans, "workflow.run_once")[0]
+    assert root.attrs["target"] == "rtl" and root.attrs["knob.bits"] == 8
+    stages = {s.name for s in obs.children_of(spans, root)}
+    assert {"workflow.stage1", "workflow.stage2", "workflow.stage3",
+            "workflow.verify"} <= stages
+    # emulator dispatches nest under the stage that issued them
+    dispatches = obs.find_spans(spans, "rtl.emulator.dispatch")
+    assert dispatches, "stage 3 must dispatch the emulator"
+    s3 = obs.find_spans(spans, "workflow.stage3")[0]
+    assert any(s3 in obs.ancestors(spans, d) for d in dispatches)
+    # verify stage contains the differential conformance spans
+    sv = obs.find_spans(spans, "workflow.verify")[0]
+    conf = obs.find_spans(spans, "verify.conformance")[0]
+    assert sv in obs.ancestors(spans, conf)
+    assert sv.attrs["passed"] is True
+
+    # the Chrome export is valid JSON and preserves the tree
+    import json as _json
+    doc = _json.loads(_json.dumps(cap.trace.chrome()))
+    back = obs.from_chrome_trace(doc)
+    assert len(back) == len(spans)
+
+    # non-degenerate latency distribution on the report
+    m = rec.measurement
+    assert 0 < m.latency_p50_s <= m.latency_p99_s
+    # pipeline metrics landed in the captured registry
+    snap = cap.trace.metrics
+    assert snap["rtl.emulator.dispatch.fused"]["value"] > 0
+    assert snap["measure.latency_s.rtl"]["count"] > 0
+
+
+def test_workflow_tracing_disabled_is_noop():
+    """With the default (disabled) tracer, run_once records nothing — the
+    near-zero-overhead contract of DESIGN.md §11."""
+    from repro.obs import get_tracer
+
+    trc = get_tracer()
+    assert trc.enabled is False
+    assert trc.spans == []
