@@ -193,7 +193,20 @@ def main():
                          "plus a full differential check + golden vectors "
                          "for the final RTL design (reports land in "
                          "<build-dir>/<arch>/ when given)")
+    ap.add_argument("--chaos", default=None, metavar="PLAN_JSON",
+                    help="run a scripted chaos scenario against the final "
+                         "RTL deployment: the FaultPlan JSON is injected "
+                         "under a guarded wrapper (canary + breaker + "
+                         "RTL->XLA fallback) and scored on the golden "
+                         "vectors; exits non-zero unless the fault is "
+                         "detected and traffic recovers with zero "
+                         "post-detection corruption (resilience.json "
+                         "lands in <build-dir>/<arch>/ when given); "
+                         "see examples/chaos_plan.json")
     args = ap.parse_args()
+    if args.chaos and args.target != "rtl":
+        ap.error("--chaos models SEUs in the generated accelerator; "
+                 "use --target rtl")
     target = args.target
     arch = ARCH_ALIASES.get(args.arch, args.arch)
     TRAIN_STEPS = args.train_steps
@@ -286,6 +299,38 @@ def main():
             print(f"ConformanceReport + golden vectors written to {out}/")
         if not rep.passed:
             raise SystemExit("conformance FAILED — see report above")
+
+    # --- scripted chaos: fault-inject the deployed accelerator ----------- #
+    if args.chaos:
+        from repro.resilience import ChaosSpec, FallbackPolicy, run_chaos
+        from repro.resilience import FaultPlan, GuardPolicy
+        from repro.rtl.emulator import reference_apply
+        from repro.core.target import XLADeployment
+
+        plan = FaultPlan.load(args.chaos)
+        spec = ChaosSpec(plan=plan, n_requests=24, seed=plan.seed,
+                         policy=GuardPolicy(timeout_s=0.25, max_retries=2,
+                                            breaker_threshold=3,
+                                            canary_every=4))
+        fb = XLADeployment(fn=jax.jit(
+            lambda x: reference_apply(dep.graph, x)), hw=XC7S15)
+        resil = run_chaos(dep, spec, fallback=FallbackPolicy.to_xla(fb))
+        print(f"\n{resil.summary()}")
+        for f in resil.faults_injected:
+            print(f"  injected: {f}")
+        for d in resil.faults_detected:
+            print(f"  detected: {d}")
+        if out is not None:
+            import os
+
+            resil.save(os.path.join(out, "resilience.json"))
+            print(f"ResilienceReport written to {out}/resilience.json")
+        if not resil.passed:
+            raise SystemExit(
+                "chaos scenario FAILED: detected="
+                f"{resil.detected} recovered={resil.recovered} "
+                f"corrupted_after_detection="
+                f"{resil.corrupted_after_detection}")
 
     # --- write the captured trace ---------------------------------------- #
     if cap is not None:

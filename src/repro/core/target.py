@@ -174,6 +174,20 @@ class Deployment:
                                  model_flops=model_flops, hw=hw,
                                  protocol=protocol, oracle=oracle)
 
+    def guarded(self, **kwargs) -> "Deployment":
+        """Wrap this deployment for fault-tolerant serving: per-call
+        timeout, bounded retry, circuit breaker, golden-vector canary
+        probes, and graceful fallback (``repro.resilience``, DESIGN.md
+        §12). Keyword arguments go to
+        :class:`~repro.resilience.GuardedDeployment` (``policy=``,
+        ``fallback=``, ``canary=``, injectable ``clock``/``rng``, ...).
+        Part of the uniform contract so a pool can guard any target the
+        registry produces.
+        """
+        from repro.resilience import GuardedDeployment
+
+        return GuardedDeployment(self, **kwargs)
+
 
 @dataclass
 class XLADeployment(Deployment):

@@ -62,6 +62,8 @@ class WorkflowRecord:
     satisfied: bool
     #: ConformanceReport from the verify stage (None when verify=False)
     conformance: Optional[Any] = None
+    #: ResilienceReport from the chaos stage (None when resilience=None)
+    resilience: Optional[Any] = None
 
 
 @dataclass
@@ -88,6 +90,10 @@ class Workflow:
     #: run the Elastic Node conformance stage (Deployment.verify) after
     #: every stage-3 measurement and attach its report to the record
     verify: bool = False
+    #: optional scripted chaos stage: a ``repro.resilience.ChaosSpec`` to
+    #: run against the deployed artifact after measurement (with graceful
+    #: degradation to the XLA step fn); attaches a ResilienceReport
+    resilience: Optional[Any] = None
     # deprecated spellings (forwarded in __post_init__):
     backend: Optional[str] = None
     fmt_builder: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None
@@ -175,13 +181,48 @@ class Workflow:
                     conf = dep.verify(args, model=design.model,
                                       model_flops=model_flops)
                     sv.set_attrs(passed=conf.passed)
+            # Resilience stage — scripted chaos against the deployed
+            # artifact: fault injection under a guarded wrapper with
+            # graceful RTL→XLA degradation, scored on the golden vectors.
+            resil = None
+            if self.resilience is not None:
+                with trc.span("workflow.resilience") as sr:
+                    resil = self._run_resilience(dep)
+                    sr.set_attrs(passed=resil.passed,
+                                 detected=resil.detected,
+                                 degraded=resil.requests_degraded,
+                                 lost=resil.requests_lost)
             rec = WorkflowRecord(
                 iteration=it, knobs=dict(knobs), design=design,
                 synthesis=syn, measurement=meas,
                 est_vs_meas=compare(syn, meas), satisfied=False,
-                conformance=conf)
+                conformance=conf, resilience=resil)
         self.history.append(rec)
         return rec
+
+    def _run_resilience(self, dep):
+        """Run the configured :class:`~repro.resilience.ChaosSpec` against
+        the deployed artifact. The fallback is the float oracle of the
+        *same lowered graph* (``reference_apply``), jitted — the XLA
+        deployment of the same model, same ``SynthesisReport`` lineage, so
+        degradation changes the substrate (and its energy/accuracy class),
+        not the function being served.
+        """
+        from repro.resilience import FallbackPolicy, run_chaos
+
+        graph = getattr(dep, "graph", None)
+        if graph is None:
+            raise ValueError(
+                "Workflow(resilience=...) needs a graph-carrying deployment"
+                " (a self-executing target such as 'rtl') to generate "
+                "golden vectors and an XLA fallback of the same design; "
+                f"target {self.target!r} produced none")
+        from repro.rtl.emulator import reference_apply
+
+        fb = XLADeployment(fn=jax.jit(lambda x: reference_apply(graph, x)),
+                           hw=self.creator.hw)
+        return run_chaos(dep, self.resilience,
+                         fallback=FallbackPolicy.to_xla(fb))
 
     def _synth_from_fn(self, fn, args, model_flops, *, model: str = "wf",
                        arch: Optional[str] = None) -> SynthesisReport:

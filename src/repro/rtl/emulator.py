@@ -37,6 +37,7 @@ context templates run against. Per-op math lives in :mod:`repro.rtl.oplib`.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Union
@@ -110,6 +111,11 @@ class RTLEmulator:
         self.cache_misses = 0
         self.cache_evictions = 0
         self.dispatch_counts: Dict[str, int] = {}
+        self.seu_flips = 0               # injected bit-flips (resilience)
+        # pooled serving calls run_many from worker threads; the program
+        # LRU pop/insert/evict and the dispatch-count dict are the only
+        # shared mutable state on that path — one lock covers both.
+        self._lock = threading.Lock()
 
     # -- execution context handed to the templates ---------------------------
     def prepared(self, name: str) -> Dict:
@@ -137,34 +143,80 @@ class RTLEmulator:
         plus the matching ``rtl.emulator.cache_*`` process counters.
         """
         key = (tuple(shape), jnp.dtype(dtype).name)
-        prog = self._programs.pop(key, None)
-        hit = prog is not None
         mx = get_metrics()
-        if prog is None:
-            self.cache_misses += 1
-            mx.counter("rtl.emulator.cache_miss").inc()
+        with self._lock:
+            prog = self._programs.pop(key, None)
+            hit = prog is not None
+            if prog is None:
+                self.cache_misses += 1
+                mx.counter("rtl.emulator.cache_miss").inc()
 
-            def walk(x_int):
-                self.trace_count += 1        # python side effect: trace-time
-                return self._execute(x_int, mode=self.mode)
+                def walk(x_int):
+                    self.trace_count += 1    # python side effect: trace-time
+                    return self._execute(x_int, mode=self.mode)
 
-            prog = jax.jit(walk)
-            while len(self._programs) >= self._max_programs:
-                self._programs.popitem(last=False)
-                self.cache_evictions += 1
-                mx.counter("rtl.emulator.cache_evict").inc()
-        else:
-            self.cache_hits += 1
-            mx.counter("rtl.emulator.cache_hit").inc()
-        self._programs[key] = prog           # (re)insert most-recently-used
+                prog = jax.jit(walk)
+                while len(self._programs) >= self._max_programs:
+                    self._programs.popitem(last=False)
+                    self.cache_evictions += 1
+                    mx.counter("rtl.emulator.cache_evict").inc()
+            else:
+                self.cache_hits += 1
+                mx.counter("rtl.emulator.cache_hit").inc()
+            self._programs[key] = prog       # (re)insert most-recently-used
         return prog, hit
 
     def cache_stats(self) -> Dict[str, int]:
         """Program-cache behavior + per-mode dispatch counts, one dict."""
-        return {"hits": self.cache_hits, "misses": self.cache_misses,
-                "evictions": self.cache_evictions,
-                "retraces": self.trace_count,
-                "dispatches": dict(self.dispatch_counts)}
+        with self._lock:
+            return {"hits": self.cache_hits, "misses": self.cache_misses,
+                    "evictions": self.cache_evictions,
+                    "retraces": self.trace_count,
+                    "dispatches": dict(self.dispatch_counts)}
+
+    # -- SEU model (repro.resilience): the prepared device constants ARE
+    # -- the design's BRAM/ROM memories; flipping one bit of one word
+    # -- models a single-event upset in the flashed accelerator. ----------
+    def memories(self) -> List[tuple]:
+        """Addressable (node, key) pairs: every sized array constant a
+        fault plan may target — weights, biases, LUT tables."""
+        out = []
+        for name in sorted(self._prep):
+            for key in sorted(self._prep[name]):
+                v = self._prep[name][key]
+                if hasattr(v, "shape") and np.asarray(v).size > 0:
+                    out.append((name, key))
+        return out
+
+    def flip_bit(self, node: str, key: str, word: int, bit: int) -> int:
+        """Flip ``bit`` of flat ``word`` in memory ``node.key``; returns the
+        corrupted word's new int32 value.
+
+        The compiled programs close over the prepared constants at trace
+        time, so — exactly like reflashing a BRAM under a running design —
+        the mutation only takes effect by invalidating every compiled
+        program (the next dispatch re-traces against the corrupted memory).
+        Silent by construction: no error is raised, subsequent outputs are
+        simply wrong, and only a golden-vector canary can tell.
+        """
+        if not 0 <= bit <= 31:
+            raise ValueError(f"bit must be in [0, 31], got {bit}")
+        if node not in self._prep or key not in self._prep[node]:
+            raise KeyError(f"no prepared memory {node!r}.{key!r}; see "
+                           f"memories()")
+        flat = np.asarray(self._prep[node][key], np.int32).copy().reshape(-1)
+        w = int(word) % flat.size
+        # XOR through a uint32 view: flipping bit 31 of an int32 would
+        # overflow in python-int arithmetic, the reinterpret-cast doesn't.
+        u = flat.view(np.uint32)
+        u[w] ^= np.uint32(1) << np.uint32(bit)
+        shaped = flat.reshape(np.asarray(self._prep[node][key]).shape)
+        with self._lock:
+            self._prep[node][key] = jnp.asarray(shaped, jnp.int32)
+            self._programs.clear()       # force re-trace on corrupted memory
+            self.seu_flips += 1
+        get_metrics().counter("rtl.emulator.seu_flips").inc()
+        return int(flat[w])
 
     def _result(self, env: Dict[str, jax.Array]) -> EmulationResult:
         out_edge = self.graph.edges[self.graph.outputs[0]]
@@ -175,7 +227,8 @@ class RTLEmulator:
                                trace=env)
 
     def _count_dispatch(self, mode: str) -> None:
-        self.dispatch_counts[mode] = self.dispatch_counts.get(mode, 0) + 1
+        with self._lock:
+            self.dispatch_counts[mode] = self.dispatch_counts.get(mode, 0) + 1
         get_metrics().counter(f"rtl.emulator.dispatch.{mode}").inc()
 
     def run_int(self, x_int: jax.Array) -> EmulationResult:

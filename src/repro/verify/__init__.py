@@ -19,9 +19,12 @@ and hardware template:
 Entry points: ``Deployment.verify(...)`` on any translated artifact,
 ``Workflow(verify=True)`` for the feedback loop, and
 ``examples/elastic_workflow.py --verify`` / the CI conformance job for the
-end-to-end run.
+end-to-end run. :func:`canary_check` is the in-service slice of the same
+protocol — a few golden rows replayed through a *live* deployment, the
+health probe ``repro.resilience`` guards run between requests.
 """
-from repro.verify.conformance import (ConformanceReport,  # noqa: F401
+from repro.verify.conformance import (CanaryResult,  # noqa: F401
+                                      ConformanceReport, canary_check,
                                       fuzz_template, graph_error_budget_lsb,
                                       run_conformance, verify_deployment)
 from repro.verify.protocol import (TABLE1_GOP_PER_J,  # noqa: F401

@@ -230,6 +230,59 @@ def fuzz_template(kind: str, *, seed: int = 0, batch: int = 8,
 
 
 # --------------------------------------------------------------------------- #
+# Canary: the in-service health-check slice of the golden protocol
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class CanaryResult:
+    """Verdict of one golden-slice health probe (``canary_check``)."""
+
+    design: str
+    n: int
+    passed: bool
+    n_mismatch: int = 0
+    max_diff: int = 0
+    path: str = "int"                # "int" (emulator codes) or "float"
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def canary_check(dep, vectors: VectorSet, *, n: int = 4) -> CanaryResult:
+    """Replay the first ``n`` golden rows through a *live* deployment and
+    demand integer-exact responses — the in-service slice of the Elastic
+    Node protocol that ``repro.resilience`` guards probe with.
+
+    Unlike :func:`run_conformance` (which re-executes the *design*), this
+    exercises the deployment instance actually serving traffic: for RTL
+    deployments the int codes go straight through its emulator (whose
+    prepared memories are exactly what an SEU corrupts); host-executed
+    deployments answer in float and are re-encoded at the output format.
+    A single flipped weight bit shows up here as a code mismatch on the
+    rail rows long before any accuracy metric would move.
+    """
+    vs = vectors.head(n)
+    emu = getattr(dep, "emulator", None)
+    if emu is not None:
+        got = np.asarray(emu.run_int(vs.stimulus).outputs, np.int64)
+        path = "int"
+    else:
+        out = dep(np.asarray(vs.stimulus_f()))
+        got = np.asarray(np.rint(np.asarray(out, np.float32)
+                                 * vs.out_fmt.scale), np.int64)
+        path = "float"
+    want = np.asarray(vs.response, np.int64)
+    got = got.reshape(want.shape)
+    diff = np.abs(got - want)
+    return CanaryResult(design=vs.design, n=vs.n_vectors,
+                        passed=bool(np.array_equal(got, want)),
+                        n_mismatch=int(np.count_nonzero(diff)),
+                        max_diff=int(diff.max()) if diff.size else 0,
+                        path=path)
+
+
+# --------------------------------------------------------------------------- #
 # Deployment-level entry (what Deployment.verify calls)
 # --------------------------------------------------------------------------- #
 

@@ -72,6 +72,24 @@ class VectorSet:
         """The float values the int stimulus codes represent (exact)."""
         return self.stimulus.astype(np.float32) / self.in_fmt.scale
 
+    def head(self, n: int) -> "VectorSet":
+        """The first ``n`` rows as a standalone set — the canary slice.
+
+        Health probes (``repro.resilience``) replay a handful of golden
+        rows per check; the leading rows are the corner patterns
+        (zero, rail-low, rail-high), which exercise every memory's
+        contribution before any random row would.
+        """
+        if n < 1:
+            raise ValueError(f"head(n) needs n >= 1, got {n}")
+        n = min(n, self.n_vectors)
+        return VectorSet(design=self.design,
+                         stimulus=self.stimulus[:n],
+                         response=self.response[:n],
+                         in_fmt=self.in_fmt, out_fmt=self.out_fmt,
+                         seed=self.seed,
+                         meta={**self.meta, "slice": f"head({n})"})
+
 
 def _sha256(a: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()

@@ -363,3 +363,92 @@ def test_workflow_verify_stage_records_conformance():
                    target="rtl")
     rec2 = wf2.run_once({}, 0)
     assert rec2.conformance is None
+
+
+# --------------------------------------------------------------------------- #
+# Protocol band edges: inclusive boundaries + the advisory/enforced split
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("rtol", [0.05, 0.15])
+def test_protocol_band_boundary_is_inclusive(rtol):
+    """A measurement landing exactly on the band edge passes (the check is
+    <=, not <) and one just beyond fails — for both the 5% cycle-model
+    band and the 15% Table-I band, on both sides of the reference."""
+    import math
+
+    from repro.verify.protocol import _band
+
+    ref = 100.0
+    edge = rtol * abs(ref)
+    assert _band("hi", ref + edge, ref, rtol).passed
+    assert _band("lo", ref - edge, ref, rtol).passed
+    assert not _band("hi+", math.nextafter(ref + edge, math.inf),
+                     ref, rtol).passed
+    assert not _band("lo-", math.nextafter(ref - edge, -math.inf),
+                     ref, rtol).passed
+    # negative references band on |reference|
+    assert _band("neg", -ref - edge, -ref, rtol).passed
+    # non-finite measurements never pass, whatever the band
+    assert not _band("nan", math.nan, ref, rtol).passed
+    assert not _band("inf", math.inf, ref, rtol).passed
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_protocol_xla_advisory_vs_enforced_split(arch):
+    """Host-executed targets: only the positivity sanity checks gate
+    ``passed``; the synthesis-estimate band is recorded as evidence but
+    advisory (enforced=False) — host wall-clock has no fabric model."""
+    from repro.verify.protocol import run_protocol
+
+    cfg = get_config(arch)
+    cr = Creator()
+    st_ = cr.build(cfg, _shapes(cfg)["infer_1"])
+    syn, dep = cr.translate(st_, target="xla")
+    # the estimate band only exists for deployments carrying the synthesis
+    # latency estimate; record it the way a saved manifest would
+    dep.cost["est_latency_s"] = syn.est_latency_s
+    params, _ = st_.init()
+    ab = st_.abstract_inputs()
+    batch = {k: (jax.random.normal(jax.random.PRNGKey(0), v.shape)
+                 if k == "x" else jnp.zeros(v.shape, v.dtype))
+             for k, v in ab["batch"].items()}
+    rep = run_protocol(dep, (params, batch), model=cfg.name,
+                       model_flops=_flops(cfg),
+                       protocol=MeasurementProtocol(warmup=1, n_runs=2))
+    by_name = {c.name: c for c in rep.checks}
+    enforced = {n for n, c in by_name.items() if c.enforced}
+    assert enforced == {"latency_positive_finite", "energy_positive_finite"}
+    assert "latency_vs_estimate" in by_name          # recorded, not gating
+    assert not by_name["latency_vs_estimate"].enforced
+    assert rep.passed == all(c.passed for c in rep.checks if c.enforced)
+    assert rep.passed, rep.to_json()
+
+
+def test_protocol_advisory_failure_does_not_gate():
+    """An arbitrarily blown advisory band leaves ``passed`` True: only
+    enforced checks have teeth."""
+    from repro.core.report import MeasurementReport
+    from repro.core.target import Deployment
+    from repro.verify.protocol import run_protocol
+
+    class _HostDep(Deployment):
+        target = "host-fake"
+        cost = {"est_latency_s": 1e-12}   # 12 orders off the measurement
+
+        def __call__(self, *args):
+            return np.float32(0.0)
+
+        def measure(self, args, **kw):
+            return MeasurementReport(model="m", platform="p", latency_s=1.0,
+                                     power_w=1.0, energy_j=1.0,
+                                     gop_per_j=1.0,
+                                     n_runs=kw.get("n_runs", 1),
+                                     target=self.target)
+
+    rep = run_protocol(_HostDep(), (np.zeros(1, np.float32),), model="m",
+                       model_flops=1e6,
+                       protocol=MeasurementProtocol(warmup=0, n_runs=1))
+    adv = [c for c in rep.checks if not c.enforced]
+    assert adv and not adv[0].passed      # the estimate band is blown...
+    assert rep.passed                     # ...but cannot gate the report

@@ -770,3 +770,49 @@ def test_measurement_report_percentiles_rtl():
     assert 0 < rep.latency_p50_s <= rep.latency_p99_s
     # the fabric latency is the cycle model, not host wall-clock
     assert rep.latency_s == pytest.approx(exe.cycles / 100e6, rel=1e-6)
+
+
+def test_emulator_thread_hammer_consistent():
+    """Pooled serving dispatches one emulator from worker threads; the lock
+    in _program/_count_dispatch must keep the LRU + counters consistent
+    under contention (cache churn forced by max_programs < live shapes),
+    and every thread must still see bit-exact outputs."""
+    import threading
+
+    g = _lstm_graph()
+    em = RTLEmulator(g, max_programs=2)
+    xs = {b: jax.random.normal(jax.random.PRNGKey(b), (b, 6, 1))
+          for b in (1, 2, 3)}
+    want = {b: np.asarray(RTLEmulator(g).run(x).outputs)
+            for b, x in xs.items()}
+    n_threads, n_iters = 4, 6
+    errors = []
+
+    def hammer(tid):
+        try:
+            for i in range(n_iters):
+                b = 1 + (tid + i) % 3
+                out = np.asarray(em.run(xs[b]).outputs)
+                if not np.array_equal(out, want[b]):
+                    errors.append((tid, i, b, "mismatch"))
+            outs = em.run_many([xs[1], xs[2]])   # one composite dispatch
+            for b, r in zip((1, 2), outs):
+                if not np.array_equal(np.asarray(r.outputs), want[b]):
+                    errors.append((tid, b, "run_many mismatch"))
+        except Exception as e:              # noqa: BLE001 - collect, don't die
+            errors.append((tid, repr(e)))
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:5]
+    st = em.cache_stats()
+    total = n_threads * (n_iters + 1)       # run_many is ONE dispatch
+    assert sum(st["dispatches"].values()) == total
+    assert st["hits"] + st["misses"] == total
+    assert st["misses"] >= 3                # at least one per distinct shape
+    # the LRU honored its capacity: live programs = misses - evictions
+    assert st["misses"] - st["evictions"] <= 2

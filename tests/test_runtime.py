@@ -114,7 +114,8 @@ def test_server_drain_stats(par_f32):
 
 
 def test_server_drain_limit_error_names_state(par_f32):
-    """Tripping max_ticks raises with the live queue/slot/stats state."""
+    """strict=True keeps the old contract: tripping max_ticks raises with
+    the live queue/slot/stats state."""
     cfg = get_config("qwen3-32b", smoke=True)
     st = Stepper(cfg, ShapeConfig("p", "prefill", 16, 1), SMOKE_MESH, par_f32)
     params, _ = st.init()
@@ -124,7 +125,122 @@ def test_server_drain_limit_error_names_state(par_f32):
     srv.submit(list(range(5, 13)), max_new_tokens=8)
     srv.submit(list(range(6, 14)), max_new_tokens=8)
     with pytest.raises(RuntimeError) as ei:
-        srv.run_until_drained(max_ticks=2)
+        srv.run_until_drained(max_ticks=2, strict=True)
     msg = str(ei.value)
     assert "max_ticks=2" in msg
     assert "slots busy" in msg and "stats=" in msg
+
+
+def test_server_drain_limit_partial_result(par_f32):
+    """Default (non-strict) max_ticks trip returns partial progress: the
+    retired requests, drained=False, and the in-flight rest in pending —
+    nothing is thrown away."""
+    cfg = get_config("qwen3-32b", smoke=True)
+    st = Stepper(cfg, ShapeConfig("p", "prefill", 16, 1), SMOKE_MESH, par_f32)
+    params, _ = st.init()
+    srv = Server(cfg, params, ServerConfig(batch_slots=1, max_len=48,
+                                           eos_token=-1), SMOKE_MESH,
+                 par_f32)
+    srv.submit(list(range(5, 13)), max_new_tokens=2)
+    srv.submit(list(range(6, 14)), max_new_tokens=8)
+    srv.submit(list(range(7, 15)), max_new_tokens=8)
+    res = srv.run_until_drained(max_ticks=3)
+    assert res.drained is False
+    assert all(r.done for r in res)                   # retired only
+    assert len(res) + len(res.pending) == 3           # nothing lost
+    assert all(not r.done for r in res.pending)
+    assert srv.metrics.counter("server.drain_truncated").value == 1
+    # a clean drain keeps the old shape: drained=True, no pending
+    done = srv.run_until_drained()
+    assert done.drained is True and done.pending == []
+    assert len(done) == 3                             # all retired now
+
+
+# --------------------------------------------------------------------------- #
+# DeploymentPool: health-aware admission + bounded-queue backpressure
+# --------------------------------------------------------------------------- #
+
+
+class _FakeResult:
+    def __init__(self, value, source, degraded):
+        self.value, self.source, self.degraded = value, source, degraded
+
+
+class _FakeGuard:
+    """Duck-typed pool member: can_serve()/call() like GuardedDeployment."""
+
+    def __init__(self, healthy=True, degraded=False, explode=False):
+        self.healthy, self.degraded, self.explode = healthy, degraded, explode
+        self.served = 0
+
+    def can_serve(self):
+        return self.healthy
+
+    def call(self, x):
+        if self.explode:
+            raise RuntimeError("boom")
+        self.served += 1
+        return _FakeResult(x * 2, "fake", self.degraded)
+
+
+def test_pool_round_robin_and_statuses():
+    from repro.runtime.server import DeploymentPool
+
+    a, b = _FakeGuard(), _FakeGuard(degraded=True)
+    pool = DeploymentPool([a, b], max_queue=16)
+    rids = [pool.submit(i) for i in range(6)]
+    st = pool.run_until_drained()
+    assert st.served_ok == 3 and st.served_degraded == 3 and st.shed == 0
+    assert a.served == 3 and b.served == 3        # round-robin split
+    assert pool.result(rids[0])["value"] == 0
+    statuses = {pool.result(r)["status"] for r in rids}
+    assert statuses == {"ok", "degraded"}
+
+
+def test_pool_sheds_at_submit_when_queue_full():
+    from repro.runtime.server import DeploymentPool
+
+    pool = DeploymentPool([_FakeGuard()], max_queue=2)
+    rids = [pool.submit(i) for i in range(5)]
+    shed = [r for r in rids if pool.result(r)
+            and pool.result(r)["status"] == "shed"]
+    assert len(shed) == 3                          # bounded backpressure
+    assert all(pool.result(r)["reason"] == "queue_full" for r in shed)
+    st = pool.run_until_drained()
+    assert st.submitted == 5 and st.shed == 3 and st.served_ok == 2
+    assert pool.metrics.counter("server.pool.shed").value == 3
+
+
+def test_pool_quarantined_member_takes_no_traffic():
+    from repro.runtime.server import DeploymentPool
+
+    sick, well = _FakeGuard(healthy=False), _FakeGuard()
+    pool = DeploymentPool([sick, well], max_queue=16)
+    for i in range(4):
+        pool.submit(i)
+    st = pool.run_until_drained()
+    assert sick.served == 0 and well.served == 4   # health-aware admission
+    assert st.served_ok == 4 and st.lost == 0
+
+
+def test_pool_age_sheds_when_nothing_serves():
+    from repro.runtime.server import DeploymentPool
+
+    pool = DeploymentPool([_FakeGuard(healthy=False)], max_queue=16,
+                          max_wait_ticks=2)
+    for i in range(3):
+        pool.submit(i)
+    st = pool.run_until_drained(max_ticks=50)
+    assert st.shed == 3 and st.served_ok == 0      # sustained-open -> shed
+    assert all(r["reason"] == "max_wait_ticks"
+               for r in pool.results.values())
+
+
+def test_pool_member_exception_is_lost_not_fatal():
+    from repro.runtime.server import DeploymentPool
+
+    pool = DeploymentPool([_FakeGuard(explode=True)], max_queue=4)
+    pool.submit(1)
+    st = pool.run_until_drained()
+    assert st.lost == 1
+    assert list(pool.results.values())[0]["error"] == "RuntimeError"

@@ -205,3 +205,68 @@ def test_workflow_tracing_disabled_is_noop():
     trc = get_tracer()
     assert trc.enabled is False
     assert trc.spans == []
+
+
+def test_workflow_resilience_stage_records_report():
+    """Workflow(resilience=ChaosSpec): run_once drives the scripted chaos
+    scenario against the deployed RTL artifact — SEU detected by the
+    canary, breaker quarantined, traffic degraded to the XLA fallback —
+    and attaches the ResilienceReport under a workflow.resilience span."""
+    from repro import obs
+    from repro.core.types import SHAPES_LSTM
+    from repro.energy.hw import XC7S15
+    from repro.model.lstm import lstm_apply
+    from repro.resilience import (ChaosSpec, FaultPlan, FaultSpec,
+                                  GuardPolicy)
+
+    cfg = get_config("elastic-lstm")
+
+    def train(knobs):
+        params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+        return params, DesignReport(model="elastic-lstm", train_loss=0.0,
+                                    eval_loss=0.0), None
+
+    def steps(knobs, params):
+        x = jnp.asarray(traffic_flow_batch(TrafficConfig(batch=1), 0)["x"])
+        fn = lambda p, xx: lstm_apply(p, xx, cfg)[0]
+        return fn, (params, x), float(lstm_flops(cfg))
+
+    spec = ChaosSpec(
+        plan=FaultPlan(faults=(
+            FaultSpec(kind="bitflip", at_call=3, memory="lstm_cell_l0.w",
+                      word=0, bit=7),), seed=3),
+        n_requests=10,
+        policy=GuardPolicy(max_retries=1, breaker_threshold=3,
+                           canary_every=2))
+    creator = Creator(hw=XC7S15)
+    wf = Workflow(creator=creator, train_fn=train, step_builder=steps,
+                  stepper_builder=lambda k: creator.build(
+                      cfg, SHAPES_LSTM["infer_1"]),
+                  target="rtl", resilience=spec)
+    with obs.capture("wf") as cap:
+        rec = wf.run_once({"bits": 8, "frac": 6})
+
+    resil = rec.resilience
+    assert resil is not None and resil.passed, resil.summary()
+    assert resil.detected and resil.recovered
+    assert resil.corrupted_after_detection == 0
+    assert resil.requests_degraded > 0      # RTL→XLA failover carried it
+    assert resil.counters["resilience.faults_injected.bitflip"] == 1
+    sr = obs.find_spans(cap.trace.spans, "workflow.resilience")[0]
+    assert sr.attrs["passed"] is True and sr.attrs["detected"] is True
+    assert obs.find_spans(cap.trace.spans, "resilience.chaos")
+    # the record still carries the ordinary stage-3 artifacts
+    assert rec.measurement.target == "rtl"
+
+
+def test_workflow_resilience_needs_graph_target():
+    """The chaos stage needs a graph-carrying deployment (golden vectors +
+    same-design XLA fallback); host-executed targets fail loudly."""
+    from repro.resilience import ChaosSpec, FaultPlan, FaultSpec
+
+    spec = ChaosSpec(plan=FaultPlan(
+        faults=(FaultSpec(kind="transient", at_call=0),)), n_requests=2)
+    wf = Workflow(creator=Creator(), train_fn=_train, step_builder=_steps,
+                  target="xla", resilience=spec)
+    with pytest.raises(ValueError, match="graph-carrying"):
+        wf.run_once({"bits": 8, "frac": 6})
