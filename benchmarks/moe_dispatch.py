@@ -41,7 +41,8 @@ for name, fn in [("dense", moe_dense), ("psum", moe_psum), ("a2a", moe_a2a)]:
             out = f(params, x)
         jax.block_until_ready(out)
         wt = (time.perf_counter() - t0) / 5
-    print(f"{name:>6}: wall={wt*1e3:7.1f} ms  wire_bytes={stc.total_wire_bytes:.3e}  counts={stc.counts}")
+    print(f"{name:>6}: wall={wt*1e3:7.1f} ms  "
+          f"wire_bytes={stc.total_wire_bytes:.3e}  counts={stc.counts}")
 """
 
 

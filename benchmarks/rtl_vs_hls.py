@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.energy.hw import TPU_V5E
-from repro.energy.roofline import normalize_cost, parse_collectives
+from repro.energy.roofline import normalize_cost
 
 
 def _cost(fn, *args):
@@ -49,7 +49,8 @@ def bench_attention(B=4, S=2048, H=8, hd=128):
     est = lambda f, b: max(f / TPU_V5E.peak_flops, b / TPU_V5E.hbm_bw)
     print(f"flash_attention  B{B} S{S} H{H} hd{hd}:")
     print(f"  XLA(HLS-analogue): bytes={byts:.3e}  est={est(flops, byts)*1e6:8.1f} us")
-    print(f"  template(RTL):     bytes={t_bytes:.3e}  est={est(t_flops, t_bytes)*1e6:8.1f} us"
+    print(f"  template(RTL):     bytes={t_bytes:.3e}  "
+          f"est={est(t_flops, t_bytes)*1e6:8.1f} us"
           f"   traffic x{byts/t_bytes:.1f} less")
     return {"xla_bytes": byts, "tpl_bytes": t_bytes,
             "speedup_est": est(flops, byts) / est(t_flops, t_bytes)}
@@ -76,9 +77,11 @@ def bench_quant_matmul(M=512, K=4096, N=4096):
         lambda a, b: quant_matmul_ref(a, b, xs, ip.scale["w"]),
         (xq, ip.q["w"]))
     print(f"quant_matmul M{M} K{K} N{N}:")
-    print(f"  XLA f32:  bytes={byts:.3e}  est={t_xla*1e6:8.1f} us  wall={wt_f32*1e6:8.0f} us")
-    print(f"  int8 tpl: bytes={t_bytes:.3e}  est={t_tpl*1e6:8.1f} us  wall={wt_int8*1e6:8.0f} us"
-          f"   weight-bytes x4 less")
+    print(f"  XLA f32:  bytes={byts:.3e}  est={t_xla*1e6:8.1f} us  "
+          f"wall={wt_f32*1e6:8.0f} us")
+    print(f"  int8 tpl: bytes={t_bytes:.3e}  est={t_tpl*1e6:8.1f} us  "
+          f"wall={wt_int8*1e6:8.0f} us"
+          "   weight-bytes x4 less")
     return {"est_speedup": t_xla / t_tpl, "wall_f32": wt_f32,
             "wall_int8": wt_int8}
 

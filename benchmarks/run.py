@@ -4,7 +4,6 @@ Prints ``name,us_per_call,derived`` CSV lines at the end (harness contract).
 """
 from __future__ import annotations
 
-import sys
 import time
 
 
@@ -55,7 +54,7 @@ def main() -> None:
     print(f"artifacts: {_syn.n_artifacts}  cycles: "
           f"{_syn.resources['cycles']}  est: {_syn.est_latency_s*1e6:.2f} us "
           f"@ {_syn.est_power_w*1e3:.1f} mW -> {_syn.est_gop_per_j:.2f} GOP/J"
-          f"  (Table I meas: 57.25 us @ 71.0 mW -> 5.33 GOP/J)")
+          "  (Table I meas: 57.25 us @ 71.0 mW -> 5.33 GOP/J)")
     print(f"resources: dsp={_syn.resources['dsp']}/20 "
           f"bram36={_syn.resources['bram36']}/10 "
           f"lut={_syn.resources['lut']}/8000  fits={_syn.fits}")
@@ -96,6 +95,23 @@ def main() -> None:
                  f"gop_per_j={_cmeas.gop_per_j:.2f}_"
                  f"cycles={_csyn.resources['cycles']}_"
                  f"fits={_csyn.fits}"))
+
+    # Static IR verifier: the pre-synthesis feasibility oracle must stay in
+    # the milliseconds-per-design regime for DSE to lean on it.
+    print()
+    print("=" * 72)
+    print("Static IR lint (abstract-interpretation analyzer, per design)")
+    print("=" * 72)
+    from repro.rtl.analyze import analyze_graph
+
+    for _name, _e in (("elastic-lstm", _exe), ("elastic-conv1d", _cexe)):
+        analyze_graph(_e.graph, hw=XC7S15)          # warm (lazy imports)
+        lint_us = _timeit(lambda g=_e.graph: analyze_graph(g, hw=XC7S15), n=5)
+        _rep = analyze_graph(_e.graph, hw=XC7S15)
+        print(f"{_name}: {_rep.summary()}  ({lint_us/1e3:.2f} ms)")
+        rows.append((f"ir_lint_{_name.split('-')[1]}", lint_us,
+                     f"diags={len(_rep.diagnostics)}_"
+                     f"lt10ms={lint_us < 10_000}"))
 
     # Elastic Node conformance stage: full differential verify per arch
     print()

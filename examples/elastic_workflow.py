@@ -60,7 +60,7 @@ def lstm_train_fn(knobs):
         p2, o2, _ = adamw_update(g, o, p, ocfg)
         return p2, o2, loss
 
-    for i in range(TRAIN_STEPS):
+    for _ in range(TRAIN_STEPS):
         params, opt, loss = step(params, opt)
     ev = traffic_flow_batch(TrafficConfig(batch=256, seed=9), 1)
     apply = make_qat_lstm_apply(cfg, qcfg)
@@ -112,7 +112,7 @@ def conv1d_train_fn(knobs):
         p2, o2, _ = adamw_update(g, o, p, ocfg)
         return p2, o2, loss
 
-    for i in range(TRAIN_STEPS):
+    for _ in range(TRAIN_STEPS):
         params, opt, loss = step(params, opt)
     ev = sensor_window_batch(SensorConfig(seq_len=c.seq_len,
                                           channels=c.channels,
@@ -233,7 +233,8 @@ def main():
     wf = Workflow(creator=creator, train_fn=train_fn,
                   step_builder=step_builder, target=target,
                   stepper_builder=stepper_builder if target == "rtl"
-                  else None, verify=args.verify)
+                  else None, verify=args.verify,
+                  analyze="error" if target == "rtl" else None)
     req = Requirement(max_eval_loss=0.01, max_latency_s=1.0)
     hist = wf.run(req, optimizer, {"bits": 4, "frac": 2},
                   max_iters=args.max_iters)
@@ -262,6 +263,8 @@ def main():
     syn, dep = creator_rtl.translate(
         st, target="rtl", params=params,
         options=rtl.options_from_knobs(best))
+    if hist[-1].analysis is not None:
+        print(f"\nstatic analysis: {hist[-1].analysis.summary()}")
     print(f"\nRTL translate [{arch}]: {syn.n_artifacts} artifacts, "
           f"{syn.resources['cycles']} cycles "
           f"({syn.est_latency_s*1e6:.2f} us @ 100 MHz), "
@@ -329,7 +332,7 @@ def main():
             raise SystemExit(
                 "chaos scenario FAILED: detected="
                 f"{resil.detected} recovered={resil.recovered} "
-                f"corrupted_after_detection="
+                "corrupted_after_detection="
                 f"{resil.corrupted_after_detection}")
 
     # --- write the captured trace ---------------------------------------- #
@@ -349,7 +352,7 @@ def main():
             rt.save(out)
         print(f"\n{rt.summary()}")
         print(f"\nChrome trace written to {args.trace} "
-              f"(open in Perfetto / chrome://tracing)")
+              "(open in Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,6 @@ from repro.core.creator import Creator
 from repro.core.target import list_targets
 from repro.core.types import SMOKE_MESH, ParallelismConfig, ShapeConfig
 from repro.data.pipeline import LMDataConfig, lm_batch_for_step
-from repro.model.lm import Stepper
 from repro.runtime.server import Server, ServerConfig
 
 
@@ -44,7 +43,7 @@ def main():
           f"est_latency={syn.est_latency_s*1e3:.2f} ms "
           f"bottleneck={syn.bottleneck}")
     print(f"Deployment: target={dep.target!r} "
-          f"(uniform artifact: callable / .measure / .save)")
+          "(uniform artifact: callable / .measure / .save)")
     print("per-channel seconds:",
           {k: f"{v*1e6:.0f}us" for k, v in syn.channels.items()})
 

@@ -17,7 +17,8 @@ def config() -> ModelConfig:
         n_kv_heads=1,
         d_ff=0,
         vocab_size=0,
-        lstm=LSTMConfig(hidden=20, n_layers=1, in_features=1, out_features=1, seq_len=6),
+        lstm=LSTMConfig(hidden=20, n_layers=1, in_features=1, out_features=1,
+                        seq_len=6),
     )
 
 

@@ -1,4 +1,7 @@
-"""StableLM-3B — dense MHA (kv == heads) decoder. [hf:stabilityai/stablelm-2-1_6b; unverified]"""
+"""StableLM-3B — dense MHA (kv == heads) decoder.
+
+[hf:stabilityai/stablelm-2-1_6b; unverified]
+"""
 from repro.core.types import ModelConfig
 
 

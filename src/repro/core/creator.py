@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.core import registry
 from repro.core.report import MeasurementReport, SynthesisReport

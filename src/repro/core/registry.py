@@ -13,7 +13,7 @@ supported components" rule, enforced mechanically.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
 from repro.core.types import ModelConfig
 

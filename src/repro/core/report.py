@@ -11,9 +11,8 @@ from __future__ import annotations
 
 import json
 from dataclasses import asdict, dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
-from repro.energy.hw import HWSpec
 
 
 @dataclass

@@ -107,7 +107,7 @@ class XLAOptions(TargetOptions):
 
     def __post_init__(self):
         if self.kind not in self._KINDS:
-            raise ValueError(f"XLAOptions.kind must be one of "
+            raise ValueError("XLAOptions.kind must be one of "
                              f"{self._KINDS[1:]} or None, got {self.kind!r}")
 
 

@@ -6,8 +6,8 @@ dry-run input specs, the energy model — derives from these frozen configs.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -162,7 +162,9 @@ class ModelConfig:
     # ---- derived ----------------------------------------------------------
     @property
     def hd(self) -> int:
-        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.n_heads
 
     @property
     def padded_vocab(self) -> int:

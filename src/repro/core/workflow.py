@@ -64,6 +64,9 @@ class WorkflowRecord:
     conformance: Optional[Any] = None
     #: ResilienceReport from the chaos stage (None when resilience=None)
     resilience: Optional[Any] = None
+    #: AnalysisReport from the static-verifier stage (None for targets
+    #: without one, or when the workflow runs with analyze="off")
+    analysis: Optional[Any] = None
 
 
 @dataclass
@@ -94,6 +97,10 @@ class Workflow:
     #: run against the deployed artifact after measurement (with graceful
     #: degradation to the XLA step fn); attaches a ResilienceReport
     resilience: Optional[Any] = None
+    #: static-verifier gate override ("error" | "warn" | "off"): forwarded
+    #: into the target options when they carry an ``analyze`` field (the
+    #: RTL target does); the report lands in ``WorkflowRecord.analysis``
+    analyze: Optional[str] = None
     # deprecated spellings (forwarded in __post_init__):
     backend: Optional[str] = None
     fmt_builder: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None
@@ -147,6 +154,8 @@ class Workflow:
                 tgt = get_target(self.target)
                 opts_fn = self.options_from_knobs or tgt.options_from_knobs
                 options = opts_fn(knobs)
+                if self.analyze is not None:
+                    options = self._with_analyze(options)
                 fn, args, model_flops = self.step_builder(knobs, params)
                 if self.stepper_builder is not None:
                     st = self.stepper_builder(knobs)
@@ -155,7 +164,7 @@ class Workflow:
                         model_flops=model_flops)
                 elif getattr(tgt, "requires_stepper", False):
                     raise ValueError(f"target {tgt.name!r} needs "
-                                     f"stepper_builder (the model to lower)")
+                                     "stepper_builder (the model to lower)")
                 else:
                     syn = self._synth_from_fn(fn, args, model_flops,
                                               model=design.model)
@@ -181,6 +190,16 @@ class Workflow:
                     conf = dep.verify(args, model=design.model,
                                       model_flops=model_flops)
                     sv.set_attrs(passed=conf.passed)
+            # Analyze stage — the static verifier's report, produced by
+            # graph-lowering targets during translate (DESIGN.md §13).
+            # Surfaced as its own span so a RunTrace shows the gate even
+            # though the work happened inside stage 2.
+            analysis = getattr(dep, "analysis", None)
+            if analysis is not None:
+                with trc.span("workflow.analyze") as sa:
+                    sa.set_attrs(passed=analysis.passed,
+                                 errors=len(analysis.errors),
+                                 warnings=len(analysis.warnings))
             # Resilience stage — scripted chaos against the deployed
             # artifact: fault injection under a guarded wrapper with
             # graceful RTL→XLA degradation, scored on the golden vectors.
@@ -196,9 +215,27 @@ class Workflow:
                 iteration=it, knobs=dict(knobs), design=design,
                 synthesis=syn, measurement=meas,
                 est_vs_meas=compare(syn, meas), satisfied=False,
-                conformance=conf, resilience=resil)
+                conformance=conf, resilience=resil, analysis=analysis)
         self.history.append(rec)
         return rec
+
+    def _with_analyze(self, options: TargetOptions) -> TargetOptions:
+        """Force the workflow's ``analyze`` gate into the target options.
+        ``"off"`` is a universal no-op; asking a target whose options have
+        no ``analyze`` field (e.g. XLA's) to gate raises, so a knob that
+        silently does nothing can't pass CI."""
+        import dataclasses
+
+        if not any(f.name == "analyze"
+                   for f in dataclasses.fields(options)):
+            if self.analyze == "off":
+                return options
+            raise ValueError(
+                f"Workflow(analyze={self.analyze!r}): target "
+                f"{self.target!r} options {type(options).__name__} have "
+                "no 'analyze' field — only graph-lowering targets "
+                "support the static-verifier gate")
+        return dataclasses.replace(options, analyze=self.analyze)
 
     def _run_resilience(self, dep):
         """Run the configured :class:`~repro.resilience.ChaosSpec` against

@@ -1,4 +1,4 @@
 from repro.energy.hw import HWSpec, TPU_V5E, XC7S15
+from repro.energy.meter import ChannelReport, meter_channels
 from repro.energy.roofline import (CollectiveStats, RooflineReport,
                                    parse_collectives, roofline)
-from repro.energy.meter import ChannelReport, meter_channels

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict
 
 from repro.energy.hw import HWSpec, TPU_V5E
 from repro.energy.roofline import _DTYPE_BYTES, _SHAPE_RE, parse_collectives
@@ -99,7 +99,8 @@ class ChannelReport:
         return "\n".join(rows)
 
 
-_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?[\w\[\]\{\},\s]*?\)?)\s*[\w\-]+\(")
+_DEF_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?[\w\[\]\{\},\s]*?\)?)\s*[\w\-]+\(")
 _OPND_RE = re.compile(r"\(\s*%([\w\.\-]+)")
 
 

@@ -27,13 +27,12 @@ from typing import Optional
 
 import jax
 
-from repro.configs import ALL_IDS, ARCH_IDS, get_config
+from repro.configs import ALL_IDS, get_config
 # model_flops_estimate moved to repro.core.target (so the Creator/targets can
 # import it without this module's XLA_FLAGS side effect); re-exported here
 # for callers that learned the old address.
 from repro.core.target import model_flops_estimate  # noqa: F401
-from repro.core.types import (MeshConfig, ParallelismConfig,
-                              shape_table_for, shapes_for)
+from repro.core.types import ParallelismConfig, shape_table_for, shapes_for
 from repro.energy.roofline import HEADER, RooflineReport, roofline
 from repro.launch.mesh import make_production_mesh, mesh_config
 from repro.model.lm import Stepper
@@ -180,7 +179,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                                                   par_scan)
         # 2) exact costs: reduced-depth unrolled compiles + affine combine
         flops = byts = 0.0
-        from repro.energy.roofline import CollectiveStats, parse_collectives
+        from repro.energy.roofline import parse_collectives
 
         wire = 0.0
         coll_counts: dict = {}

@@ -5,7 +5,6 @@ touches jax device state — smoke tests must keep seeing 1 CPU device.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 

@@ -19,7 +19,6 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
 
-    import jax
 
     from repro.configs import get_config
     from repro.core.types import SMOKE_MESH, ParallelismConfig, ShapeConfig

@@ -7,9 +7,8 @@ schemas, so ``init_params`` (smoke), ``abstract_params`` (dry-run) and
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.types import (MeshConfig, ModelConfig, ParallelismConfig,
                               ShapeConfig)
-from repro.model.layers import (Ctx, PSpec, abstract_params, init_params,
-                                pspecs, tree_map_pspec)
+from repro.model.layers import Ctx, abstract_params, init_params, pspecs, tree_map_pspec
 from repro.model.transformer import (apply_model, model_cache_schema,
                                      param_schema)
 from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
@@ -51,7 +49,8 @@ def cross_entropy(logits: jax.Array, targets: jax.Array) -> Tuple[jax.Array, jax
 CE_CHUNK = 512
 
 
-def chunked_ce_loss(hidden: jax.Array, targets: jax.Array, head_fn) -> Tuple[jax.Array, jax.Array]:
+def chunked_ce_loss(hidden: jax.Array, targets: jax.Array,
+                    head_fn) -> Tuple[jax.Array, jax.Array]:
     """Memory-bounded LM loss: the (B,S,V) logits tensor is never alive at
     once — per-chunk logits+CE under ``jax.checkpoint`` (bwd recomputes the
     chunk's logits instead of keeping them)."""
@@ -126,7 +125,6 @@ def make_train_step(cfg: ModelConfig, mesh_cfg: MeshConfig,
 
     if par.grad_compression and mesh is not None and mesh.size > 1:
         # int8-ring gradient reduction: manual over DP, auto over model
-        from repro.model.lm import batch_pspecs as _bp  # self-import ok
         from repro.optim.compress import make_compressed_grad_fn
 
         def step_c(params, opt_state, batch):
@@ -221,7 +219,8 @@ def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig,
     return specs
 
 
-def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+def input_specs(cfg: ModelConfig,
+                shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
     """ShapeDtypeStruct stand-ins for every model input of this cell."""
     B, S = shape.global_batch, shape.seq_len
     if cfg.family == "lstm":

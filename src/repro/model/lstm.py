@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.types import ModelConfig
-from repro.model.layers import Ctx, PSpec
+from repro.model.layers import PSpec
 
 
 def lstm_schema(cfg: ModelConfig, tp: int = 0):

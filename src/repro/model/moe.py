@@ -18,8 +18,6 @@ Three dispatch implementations, selectable via ``MoEConfig.impl``:
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -161,7 +161,7 @@ def wkv6_chunked(
     for a in range(ns):
         s_list.append(s)
         s = s * jnp.exp(sub_tot[:, :, a])[..., None] + T[:, :, a]
-    chunk_T = s                                        # contribution of chunk, decayed to end
+    chunk_T = s                            # contribution of chunk, decayed to end
     s_stack = jnp.stack(s_list, axis=2)                # (B,nc,ns,H,N,N)
     rdec = (rc.astype(f32) * jnp.exp(cprev)).astype(dt)
     y = y + jnp.einsum("bcsihn,bcshnp->bcsihp", rdec,

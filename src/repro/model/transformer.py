@@ -105,14 +105,18 @@ def block_schema(cfg: ModelConfig, kind: str, tp: int):
 def shared_block_schema(cfg: ModelConfig, tp: int):
     """zamba2 shared attention block on concat(h, emb0) — width 2·d_model."""
     d2 = 2 * cfg.d_model
+    ff_tp = cfg.d_ff % tp == 0 and tp > 1
     return {
         "norm1": norm_schema(cfg, d=d2),
         "attn": attn_schema(cfg, tp, d_in=d2, d_out=d2),
         "norm2": norm_schema(cfg, d=d2),
         "mlp": {
-            "w_gate": PSpec((d2, cfg.d_ff), P(None, "model" if cfg.d_ff % tp == 0 and tp > 1 else None)),
-            "w_up": PSpec((d2, cfg.d_ff), P(None, "model" if cfg.d_ff % tp == 0 and tp > 1 else None)),
-            "wo": PSpec((cfg.d_ff, d2), P("model" if cfg.d_ff % tp == 0 and tp > 1 else None, None)),
+            "w_gate": PSpec((d2, cfg.d_ff),
+                            P(None, "model" if ff_tp else None)),
+            "w_up": PSpec((d2, cfg.d_ff),
+                          P(None, "model" if ff_tp else None)),
+            "wo": PSpec((cfg.d_ff, d2),
+                        P("model" if ff_tp else None, None)),
         },
         "out_proj": PSpec((d2, cfg.d_model), P()),
     }

@@ -14,7 +14,6 @@ residual costs one params-sized f32 buffer.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax

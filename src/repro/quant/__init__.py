@@ -1,6 +1,6 @@
 from repro.quant.fixedpoint import (FxpFormat, fxp_quantize, fxp_fake_quant,
                                     pick_frac_bits)
-from repro.quant.qat import (QATConfig, fake_quant_tree, make_qat_lstm_apply,
-                             hard_sigmoid, hard_tanh)
 from repro.quant.ptq import (Int8Params, quantize_params_int8, int8_matmul_ref,
                              dequantize_params)
+from repro.quant.qat import (QATConfig, fake_quant_tree, make_qat_lstm_apply,
+                             hard_sigmoid, hard_tanh)

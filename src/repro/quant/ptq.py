@@ -9,7 +9,7 @@ way out of VMEM), and :func:`int8_matmul_ref` is its jnp oracle.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

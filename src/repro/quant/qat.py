@@ -9,8 +9,7 @@ cost of the cheaper hardware before synthesis.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Tuple
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

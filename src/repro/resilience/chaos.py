@@ -46,7 +46,7 @@ class ChaosSpec:
 
     def __post_init__(self):
         if self.n_requests < 1:
-            raise ValueError(f"n_requests must be >= 1, "
+            raise ValueError("n_requests must be >= 1, "
                              f"got {self.n_requests}")
 
 

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import json
 import time
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -103,11 +103,11 @@ class FaultSpec:
             raise ValueError(f"FaultSpec.kind must be one of {FAULT_KINDS}, "
                              f"got {self.kind!r}")
         if not 0.0 <= self.probability <= 1.0:
-            raise ValueError(f"probability must be in [0, 1], "
+            raise ValueError("probability must be in [0, 1], "
                              f"got {self.probability}")
         if self.at_call is None and self.probability == 0.0:
             raise ValueError(f"FaultSpec({self.kind!r}) never fires: give "
-                             f"at_call or probability > 0")
+                             "at_call or probability > 0")
         if not 0 <= self.bit <= 31:
             raise ValueError(f"bit must be in [0, 31], got {self.bit}")
         if self.delay_s < 0:
@@ -256,7 +256,7 @@ class FaultyDeployment(Deployment):
                 self._flip(s, call)
             elif s.kind == "transient":
                 self._record(s, call)
-                raise TransientFault(f"injected transient fault at call "
+                raise TransientFault("injected transient fault at call "
                                      f"{call}")
         out = self.inner(*args)
         for s in fired:

@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
@@ -77,19 +77,19 @@ class GuardPolicy:
         if self.timeout_s <= 0:
             raise ValueError(f"timeout_s must be > 0, got {self.timeout_s}")
         if self.max_retries < 0:
-            raise ValueError(f"max_retries must be >= 0, "
+            raise ValueError("max_retries must be >= 0, "
                              f"got {self.max_retries}")
         if self.backoff_mult < 1.0:
-            raise ValueError(f"backoff_mult must be >= 1, "
+            raise ValueError("backoff_mult must be >= 1, "
                              f"got {self.backoff_mult}")
         if not 0.0 <= self.jitter_frac < 1.0:
-            raise ValueError(f"jitter_frac must be in [0, 1), "
+            raise ValueError("jitter_frac must be in [0, 1), "
                              f"got {self.jitter_frac}")
         if self.breaker_threshold < 1:
-            raise ValueError(f"breaker_threshold must be >= 1, "
+            raise ValueError("breaker_threshold must be >= 1, "
                              f"got {self.breaker_threshold}")
         if self.half_open_probes < 1:
-            raise ValueError(f"half_open_probes must be >= 1, "
+            raise ValueError("half_open_probes must be >= 1, "
                              f"got {self.half_open_probes}")
         if self.canary_every < 0 or self.canary_slice < 1:
             raise ValueError("canary_every must be >= 0 and canary_slice "

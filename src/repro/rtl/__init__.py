@@ -15,9 +15,13 @@ options=RTLOptions(...))`` — "rtl" resolves to :data:`RTL_TARGET` through the
 deployment-target registry (``repro.core.target``); the pieces are importable
 here for direct use and tests.
 """
+from repro.rtl.analyze import (AnalysisContext, AnalysisError,  # noqa: F401
+                               Interval, analyze_graph)
 from repro.rtl.backend import (RTL_TARGET, RTLExecutable,  # noqa: F401
                                RTLOptions, RTLTarget, measure_rtl,
                                translate_rtl)
+from repro.rtl.diagnostics import (RULES, AnalysisReport,  # noqa: F401
+                                   Diagnostic, make_diagnostic)
 from repro.rtl.emit import emit_graph, write_artifacts  # noqa: F401
 from repro.rtl.emulator import (EmulationResult, RTLEmulator,  # noqa: F401
                                 assert_bit_exact, reference_apply)

@@ -20,12 +20,15 @@ from repro.core.target import DEFAULT_N_RUNS, Deployment, TargetOptions
 from repro.core.types import ModelConfig
 from repro.energy.hw import HWSpec, XC7S15
 from repro.quant.fixedpoint import FxpFormat
+from repro.rtl.analyze import AnalysisError, analyze_graph
+from repro.rtl.diagnostics import AnalysisReport
 from repro.rtl.emit import emit_graph
 from repro.rtl.emulator import RTLEmulator
 from repro.rtl.ir import Graph, lower_model
 from repro.rtl.resources import estimate, synthesize
 
 _EMULATOR_MODES = ("fused", "pallas", "jnp")
+_ANALYZE_MODES = ("error", "warn", "off")
 
 
 @dataclass(frozen=True)
@@ -46,12 +49,19 @@ class RTLOptions(TargetOptions):
     state_fmt: FxpFormat = FxpFormat(16, 8)
     emulator_mode: str = "fused"     # "fused" | "pallas" | "jnp"
     w_fmt_overrides: Optional[Mapping[str, FxpFormat]] = None
+    #: static-verifier gate (DESIGN.md §13): "error" fails translate on any
+    #: error-severity diagnostic, "warn" downgrades to a UserWarning,
+    #: "off" skips the analysis pass entirely.
+    analyze: str = "error"
 
     def __post_init__(self):
         if self.emulator_mode not in _EMULATOR_MODES:
-            raise ValueError(f"emulator_mode must be one of "
+            raise ValueError("emulator_mode must be one of "
                              f"{_EMULATOR_MODES}, got "
                              f"{self.emulator_mode!r}")
+        if self.analyze not in _ANALYZE_MODES:
+            raise ValueError(f"analyze must be one of {_ANALYZE_MODES}, "
+                             f"got {self.analyze!r}")
         for name in ("w_fmt", "act_fmt", "state_fmt"):
             fmt = getattr(self, name)
             if not isinstance(fmt, FxpFormat):
@@ -67,7 +77,7 @@ class RTLOptions(TargetOptions):
                                 if get_template(k).has_weights]
                     raise ValueError(
                         f"w_fmt_overrides[{kind!r}]: template {kind!r} "
-                        f"carries no weight format; weight-carrying "
+                        "carries no weight format; weight-carrying "
                         f"kinds: {weighted}")
                 if not isinstance(fmt, FxpFormat):
                     raise TypeError(
@@ -94,6 +104,8 @@ class RTLExecutable(Deployment):
     artifacts: Dict[str, str]
     hw: HWSpec
     emulator_mode: str = "fused"     # "fused" | "pallas" | "jnp"
+    #: the static verifier's report (None when translated with analyze="off")
+    analysis: Optional[AnalysisReport] = None
     emulator: RTLEmulator = field(init=False)
 
     target = "rtl"
@@ -163,9 +175,15 @@ class RTLExecutable(Deployment):
             latency_p99_s=percentile(samples, 99))
 
     def save(self, build_dir: str) -> None:
+        import os
+
         from repro.rtl.emit import write_artifacts
 
         write_artifacts(self.artifacts, build_dir)
+        if self.analysis is not None:
+            path = os.path.join(build_dir, "analysis.json")
+            with open(path, "w", encoding="utf-8") as f:
+                f.write(self.analysis.to_json())
 
 
 class RTLTarget:
@@ -204,7 +222,8 @@ class RTLTarget:
                              w_fmt=options.w_fmt, act_fmt=options.act_fmt,
                              state_fmt=options.state_fmt,
                              emulator_mode=options.emulator_mode,
-                             w_fmt_overrides=options.w_fmt_overrides)
+                             w_fmt_overrides=options.w_fmt_overrides,
+                             analyze=options.analyze)
 
 
 RTL_TARGET = RTLTarget()
@@ -217,22 +236,46 @@ def translate_rtl(cfg: ModelConfig, params, *,
                   state_fmt: FxpFormat = FxpFormat(16, 8),
                   model_flops: float = 0.0,
                   emulator_mode: str = "fused",
-                  w_fmt_overrides=None):
-    """Returns (SynthesisReport, RTLExecutable)."""
+                  w_fmt_overrides=None,
+                  analyze: str = "error"):
+    """Returns (SynthesisReport, RTLExecutable).
+
+    ``analyze`` gates the static verifier (DESIGN.md §13) between lowering
+    and emit: ``"error"`` raises :class:`~repro.rtl.analyze.AnalysisError`
+    on any error-severity diagnostic (fail fast, before codegen),
+    ``"warn"`` surfaces them as a UserWarning, ``"off"`` skips the pass.
+    """
+    import warnings
+
     from repro.obs import get_tracer
 
+    if analyze not in _ANALYZE_MODES:
+        raise ValueError(f"analyze must be one of {_ANALYZE_MODES}, "
+                         f"got {analyze!r}")
     trc = get_tracer()
     with trc.span("rtl.lower", arch=cfg.name):
         graph = lower_model(cfg, params, w_fmt=w_fmt, act_fmt=act_fmt,
                             state_fmt=state_fmt,
                             w_fmt_overrides=w_fmt_overrides)
+    analysis = None
+    if analyze != "off":
+        with trc.span("rtl.analyze", arch=cfg.name):
+            analysis = analyze_graph(graph, hw=hw)
+        if not analysis.passed:
+            if analyze == "error":
+                raise AnalysisError(analysis)
+            warnings.warn("static analysis found "
+                          f"{len(analysis.errors)} error(s):\n"
+                          f"{analysis.format()}", UserWarning,
+                          stacklevel=2)
     with trc.span("rtl.emit", arch=cfg.name):
         artifacts = emit_graph(graph)
     with trc.span("rtl.synthesize", arch=cfg.name):
         rep = synthesize(graph, hw=hw, model_flops=model_flops,
                          n_artifacts=len(artifacts))
     return rep, RTLExecutable(graph=graph, artifacts=artifacts, hw=hw,
-                              emulator_mode=emulator_mode)
+                              emulator_mode=emulator_mode,
+                              analysis=analysis)
 
 
 def measure_rtl(exe: RTLExecutable, x: jax.Array, *, model: str,

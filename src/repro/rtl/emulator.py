@@ -49,10 +49,10 @@ import numpy as np
 from repro.kernels import use_interpret
 from repro.obs import get_metrics, get_tracer
 from repro.quant.fixedpoint import fxp_to_int
+from repro.rtl.ir import Graph
 # mac primitives live in the op library now; re-exported for compatibility
 from repro.rtl.oplib import (_mac_int_jnp, get_template,  # noqa: F401
                              mac_int, mac_int_pallas)
-from repro.rtl.ir import Graph
 
 # --------------------------------------------------------------------------- #
 # Integer emulator
@@ -203,7 +203,7 @@ class RTLEmulator:
             raise ValueError(f"bit must be in [0, 31], got {bit}")
         if node not in self._prep or key not in self._prep[node]:
             raise KeyError(f"no prepared memory {node!r}.{key!r}; see "
-                           f"memories()")
+                           "memories()")
         flat = np.asarray(self._prep[node][key], np.int32).copy().reshape(-1)
         w = int(word) % flat.size
         # XOR through a uint32 view: flipping bit 31 of an int32 would

@@ -52,7 +52,12 @@ class Edge:
 
     @property
     def bits(self) -> int:
-        return int(np.prod(self.shape)) * self.fmt.total_bits
+        if any(d < 0 for d in self.shape):
+            raise ValueError(f"edge {self.name!r} has negative dim(s) in "
+                             f"shape {self.shape}")
+        # math.prod: exact ints, and () / zero-element shapes stay degenerate
+        # (1 resp. 0) instead of float-promoting through np.prod
+        return math.prod(self.shape) * self.fmt.total_bits
 
 
 @dataclass
@@ -72,8 +77,8 @@ def _require_array(node: Node, name: str, value, ndim: int) -> np.ndarray:
     if value is None:
         raise TypeError(
             f"{type(node).__name__} {node.name!r}: field {name!r} is "
-            f"required (got None) — pass the trained array when "
-            f"constructing the node")
+            "required (got None) — pass the trained array when "
+            "constructing the node")
     arr = np.asarray(value, np.float32)
     if arr.ndim != ndim:
         raise ValueError(
@@ -104,7 +109,7 @@ class LinearNode(Node):
         if self.bias.shape[0] != self.weight.shape[1]:
             raise ValueError(
                 f"LinearNode {self.name!r}: bias shape {self.bias.shape} "
-                f"does not match weight out-features "
+                "does not match weight out-features "
                 f"{self.weight.shape[1]}")
 
     def macs(self) -> int:

@@ -39,6 +39,9 @@ from repro.kernels.lstm_cell_int import CellSpec, lstm_window_int
 from repro.quant.fixedpoint import FxpFormat, fxp_quantize, fxp_requant_int
 from repro.quant.qat import hard_sigmoid, hard_tanh
 from repro.rtl import templates as T
+from repro.rtl.analyze import (AnalysisContext, Interval, check_lut_domain,
+                               checked_requant, lut_interval, mac_interval,
+                               requant_interval, resolve_lut)
 from repro.rtl.ir import (ActApplyNode, ActLUTNode, Conv1dNode, Edge,
                           ElementwiseNode, Graph, LinearNode, LSTMCellNode,
                           Node, lower_conv_model, lower_lstm_model)
@@ -197,6 +200,28 @@ class HWTemplate:
         global contract."""
         return 0
 
+    # ---- analyze (DESIGN.md §13) ------------------------------------------
+    def wire_contract(self, node: Node,
+                      graph: Graph) -> Dict[str, FxpFormat]:
+        """Edge name -> the Q-format this template's ports assume on that
+        wire. The static verifier compares each entry against the declared
+        ``Edge.fmt`` and reports EAI003 on mismatch (Q-format continuity:
+        producer out_fmt == consumer in_fmt on every wire). Default: no
+        declared port formats, nothing to check."""
+        return {}
+
+    def transfer(self, node: Node, in_intervals: Dict[str, Interval], *,
+                 graph: Graph, ctx: AnalysisContext) -> Dict[str, Interval]:
+        """Abstract-interpretation hook: map input-edge intervals to
+        output-edge intervals (integer codes), emitting diagnostics
+        through ``ctx`` (:mod:`repro.rtl.analyze`). The default bound is
+        sound for any template that saturates its outputs to the edge
+        format — every output takes the full range of its edge's format.
+        Templates whose outputs can escape their declared edge format
+        must override."""
+        return {e: Interval.full(graph.edges[e].fmt)
+                for e in node.outputs}
+
     # ---- emulate ----------------------------------------------------------
     def prepare(self, node: Node, graph: Graph) -> Dict:
         """Host-side constants to hoist once at executor construction.
@@ -294,7 +319,7 @@ def lowering_for(family: str) -> Callable[..., Graph]:
     raise NotImplementedError(
         f"no registered hardware template lowers family {family!r}; "
         f"lowerable families: {lowerable_families()} "
-        f"(use lower_linear_stack/lower_conv_stack for parameter stacks)")
+        "(use lower_linear_stack/lower_conv_stack for parameter stacks)")
 
 
 # --------------------------------------------------------------------------- #
@@ -308,6 +333,19 @@ class LinearTemplate(HWTemplate):
     kind = "linear"
     node_cls = LinearNode
     has_weights = True
+
+    def wire_contract(self, n: LinearNode,
+                      graph: Graph) -> Dict[str, FxpFormat]:
+        return {n.inputs[0]: n.in_fmt, n.outputs[0]: n.out_fmt}
+
+    def transfer(self, n: LinearNode, in_intervals: Dict[str, Interval], *,
+                 graph: Graph, ctx: AnalysisContext) -> Dict[str, Interval]:
+        acc = mac_interval(n.weight_int(), n.bias_int(),
+                           [(slice(None), in_intervals[n.inputs[0]])])
+        out = checked_requant(
+            ctx, n, acc, requant_shift(n.in_fmt, n.w_fmt, n.out_fmt),
+            n.out_fmt, n.outputs[0], what="x@W+b accumulator")
+        return {n.outputs[0]: out}
 
     def prepare(self, n: LinearNode, graph: Graph) -> Dict:
         return {"w": n.weight_int(), "b": n.bias_int()}
@@ -382,6 +420,52 @@ class LSTMCellTemplate(HWTemplate):
     family = "lstm"
     lower_model_fn = staticmethod(lower_lstm_model)
     port_out = "h_out"
+
+    def wire_contract(self, n: LSTMCellNode,
+                      graph: Graph) -> Dict[str, FxpFormat]:
+        return {n.inputs[0]: n.act_fmt, n.outputs[0]: n.act_fmt}
+
+    def transfer(self, n: LSTMCellNode, in_intervals: Dict[str, Interval],
+                 *, graph: Graph,
+                 ctx: AnalysisContext) -> Dict[str, Interval]:
+        """Single forward pass, no fixpoint needed: h and c are requant-
+        clipped to act/state format each step, so their format ranges are
+        already post-fixpoints — the gate bound below (x rows at the input
+        interval, h rows at the full act range) covers every timestep."""
+        A, C = n.act_fmt, n.state_fmt
+        sig = resolve_lut(graph, n, n.sigmoid_lut)
+        tanh = resolve_lut(graph, n, n.tanh_lut)
+        acc = mac_interval(n.weight_int(), n.bias_int(),
+                           [(slice(0, n.d_in), in_intervals[n.inputs[0]]),
+                            (slice(n.d_in, None), Interval.full(A))])
+        z = checked_requant(ctx, n, acc, n.mac_shift, A, None,
+                            what="gate accumulator")
+        for lut in (sig, tanh):
+            check_lut_domain(ctx, n, lut, z, None,
+                             what="gate pre-activation")
+        si = lut_interval(ctx, sig, z)          # i/f/o share the σ table
+        tg = lut_interval(ctx, tanh, z)
+        af, cf = A.frac_bits, C.frac_bits
+        align = n.state_align_shift
+        if align < 0:
+            ctx.diag("EAI002", n.name,
+                     f"state alignment shift {align} is negative — "
+                     f"state_fmt {C} carries fewer fraction bits than "
+                     f"act_fmt {A}")
+            align = 0
+        term = si.mul(Interval.full(C)).add(si.mul(tg).lshift(align))
+        if not term.fits_int32():
+            ctx.diag("EAI001", n.name,
+                     f"cell-state accumulator interval {term} exceeds "
+                     "the int32 word")
+        c_iv = requant_interval(term, af).clip(C)
+        c_a = requant_interval(c_iv, cf - af).clip(A)
+        check_lut_domain(ctx, n, tanh, c_a, None,
+                         what="cell-state tanh input")
+        tc = lut_interval(ctx, tanh, c_a)
+        h = checked_requant(ctx, n, si.mul(tc), af, A, n.outputs[0],
+                            what="output-gate product")
+        return {n.outputs[0]: h}
 
     def prepare(self, n: LSTMCellNode, graph: Graph) -> Dict:
         luts = graph.act_luts()
@@ -535,6 +619,21 @@ class Conv1dTemplate(HWTemplate):
 
         return conv1d_frames(x, n.kernel, n.stride)
 
+    def wire_contract(self, n: Conv1dNode,
+                      graph: Graph) -> Dict[str, FxpFormat]:
+        return {n.inputs[0]: n.in_fmt, n.outputs[0]: n.out_fmt}
+
+    def transfer(self, n: Conv1dNode, in_intervals: Dict[str, Interval], *,
+                 graph: Graph, ctx: AnalysisContext) -> Dict[str, Interval]:
+        # weight_int() is (K, C): axis-0 summation bounds the per-channel
+        # tap accumulator, whose fan-in is exactly `kernel`.
+        acc = mac_interval(n.weight_int(), n.bias_int(),
+                           [(slice(None), in_intervals[n.inputs[0]])])
+        out = checked_requant(
+            ctx, n, acc, requant_shift(n.in_fmt, n.w_fmt, n.out_fmt),
+            n.out_fmt, n.outputs[0], what="tap accumulator")
+        return {n.outputs[0]: out}
+
     def prepare(self, n: Conv1dNode, graph: Graph) -> Dict:
         K, C = n.kernel, n.channels
         w = np.asarray(n.weight_int(), np.int32)           # (K, C)
@@ -619,6 +718,10 @@ class ActLUTTemplate(HWTemplate):
     in_netlist = False
     sequential = False
 
+    def transfer(self, n: ActLUTNode, in_intervals: Dict[str, Interval], *,
+                 graph: Graph, ctx: AnalysisContext) -> Dict[str, Interval]:
+        return {}                               # a ROM computes nothing alone
+
     def prepare(self, n: ActLUTNode, graph: Graph) -> Dict:
         return {"table": n.table()}
 
@@ -667,6 +770,24 @@ class ActApplyTemplate(HWTemplate):
         g.outputs = ["y"]
         return g
 
+    def wire_contract(self, n: ActApplyNode,
+                      graph: Graph) -> Dict[str, FxpFormat]:
+        lut = resolve_lut(graph, n, n.lut)
+        return {n.inputs[0]: lut.in_fmt, n.outputs[0]: lut.out_fmt}
+
+    def transfer(self, n: ActApplyNode, in_intervals: Dict[str, Interval], *,
+                 graph: Graph, ctx: AnalysisContext) -> Dict[str, Interval]:
+        lut = resolve_lut(graph, n, n.lut)
+        x = in_intervals[n.inputs[0]]
+        check_lut_domain(ctx, n, lut, x, n.inputs[0], what="LUT input")
+        # The lookup writes raw table values to the wire (no requant), so
+        # the output interval is the table's — NOT clipped to the edge
+        # format. Recording it as the pre-clip interval lets the driver's
+        # EAI006 pass flag an output edge too narrow for the table.
+        out = lut_interval(ctx, lut, x)
+        ctx.saturation(n.outputs[0], out)
+        return {n.outputs[0]: out}
+
     def execute(self, n: ActApplyNode, env: Dict, em, mode: str) -> None:
         env[n.outputs[0]] = em.lookup(n.lut, env[n.inputs[0]])
 
@@ -706,6 +827,35 @@ class ElementwiseTemplate(HWTemplate):
               Edge("y", (6,), out_fmt))
         g.outputs = ["y"]
         return g
+
+    def wire_contract(self, n: ElementwiseNode,
+                      graph: Graph) -> Dict[str, FxpFormat]:
+        return {n.inputs[0]: n.a_fmt, n.inputs[1]: n.b_fmt,
+                n.outputs[0]: n.out_fmt}
+
+    def transfer(self, n: ElementwiseNode,
+                 in_intervals: Dict[str, Interval], *,
+                 graph: Graph, ctx: AnalysisContext) -> Dict[str, Interval]:
+        a = in_intervals[n.inputs[0]]
+        b = in_intervals[n.inputs[1]]
+        fa, fb = n.a_fmt.frac_bits, n.b_fmt.frac_bits
+        if n.kind == "mul":
+            raw, from_frac = a.mul(b), fa + fb
+        else:
+            hi_f = max(fa, fb)
+            a2, b2 = a.lshift(hi_f - fa), b.lshift(hi_f - fb)
+            for side, iv in (("a", a2), ("b", b2)):
+                if not iv.fits_int32():
+                    ctx.diag("EAI002", n.name,
+                             f"aligning operand {side!r} by "
+                             f"{hi_f - (fa if side == 'a' else fb)} bits "
+                             f"leaves int32 (interval {iv})",
+                             edge=n.inputs[0 if side == "a" else 1])
+            raw, from_frac = a2.add(b2), hi_f
+        out = checked_requant(
+            ctx, n, raw, from_frac - n.out_fmt.frac_bits, n.out_fmt,
+            n.outputs[0], what=f"elementwise {n.kind}")
+        return {n.outputs[0]: out}
 
     def execute(self, n, env: Dict, em, mode: str) -> None:
         a = env[n.inputs[0]].astype(jnp.int32)

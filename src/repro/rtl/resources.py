@@ -21,8 +21,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List
 
-from repro.energy.hw import HWSpec, XC7S15
 from repro.core.report import SynthesisReport
+from repro.energy.hw import HWSpec, XC7S15
 from repro.rtl.ir import Graph, Node
 
 # Template schedule constants (one-time calibration vs ref [11], DESIGN.md §5)
@@ -99,6 +99,8 @@ class ResourceReport:
 
 def brams_for(bits: int) -> int:
     """BRAM36 blocks needed for ``bits`` of weight/bias storage."""
+    if bits < 0:
+        raise ValueError(f"brams_for needs bits >= 0, got {bits}")
     return max(1, math.ceil(bits / BRAM36_BITS)) if bits else 0
 
 

@@ -1,3 +1,3 @@
-from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.runtime.failures import FailureInjector, PreemptionError
 from repro.runtime.server import Server, ServerConfig, Request
+from repro.runtime.trainer import Trainer, TrainerConfig

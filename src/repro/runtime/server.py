@@ -250,7 +250,7 @@ class Server:
                         for i, s in enumerate(self._slots) if s is not None]
                 if strict:
                     raise RuntimeError(
-                        f"server did not drain within max_ticks="
+                        "server did not drain within max_ticks="
                         f"{max_ticks}: {len(self._queue)} queued "
                         f"(rids {[r.rid for r in self._queue[:8]]}), "
                         f"{len(busy)} slots busy "

@@ -21,10 +21,8 @@ import jax
 import numpy as np
 
 from repro.checkpoint.ckpt import CheckpointManager
-from repro.core.types import MeshConfig, ModelConfig, ParallelismConfig, ShapeConfig
 from repro.data.pipeline import LMDataConfig, lm_batch_for_step
 from repro.model.lm import Stepper
-from repro.optim.adamw import AdamWConfig
 from repro.runtime.failures import FailureInjector, PreemptionError
 
 

@@ -178,7 +178,7 @@ def run_conformance(graph, vectors: Optional[VectorSet] = None, *,
                          budget=rep.error_budget_lsb)
         if not rep.oracle_within_budget:
             rep.notes.append(
-                f"int output deviates from the fxp_quantize oracle by "
+                "int output deviates from the fxp_quantize oracle by "
                 f"{rep.oracle_max_lsb:g} LSB > budget "
                 f"{rep.error_budget_lsb}")
 
@@ -331,7 +331,7 @@ def verify_deployment(dep, args=None, *, model: str, model_flops: float,
                                               float(np.max(np.abs(b)))))
             if not shapes_ok or err > tol:
                 rep.passed = False
-                rep.notes.append(f"deployed executable deviates from oracle "
+                rep.notes.append("deployed executable deviates from oracle "
                                  f"by {err:g} (tol {tol:g})"
                                  if shapes_ok else
                                  "deployed executable and oracle disagree "

@@ -1,0 +1,501 @@
+"""Static IR verifier (DESIGN.md §13): soundness fuzz, the EAI negative-rule
+suite, report round-trip, and the end-to-end analyze gates."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                       # image lacks hypothesis: use shim
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.creator import Creator
+from repro.core.types import SHAPES_CONV1D, SHAPES_LSTM
+from repro.energy.hw import XC7S15
+from repro.model.layers import init_params
+from repro.quant.fixedpoint import FxpFormat
+from repro.rtl import (AnalysisError, AnalysisReport, Edge, Graph,
+                       LinearNode, RTLExecutable, RTLOptions, analyze_graph,
+                       get_template, list_templates, translate_rtl)
+from repro.rtl.analyze import (Interval, requant_interval,
+                               worst_case_mac_bound)
+from repro.rtl.diagnostics import RULES, Diagnostic, make_diagnostic
+from repro.verify.vectors import canonical_graph, stimulus_codes
+
+MODES = ("fused", "pallas", "jnp")
+
+
+def _probe_graphs(seed: int):
+    rng = np.random.default_rng(seed)
+    out = []
+    for kind in list_templates():
+        g = get_template(kind).probe_graph(rng)
+        if g is not None:
+            out.append(g)
+    return out
+
+
+def _linear_graph(*, w, d_in=4, d_out=3, w_fmt=FxpFormat(8, 6),
+                  in_fmt=FxpFormat(8, 4), out_fmt=FxpFormat(16, 8),
+                  edge_out_fmt=None, name="neg"):
+    g = Graph(name=name)
+    g.edges["x"] = Edge("x", (d_in,), in_fmt)
+    g.inputs = ["x"]
+    g.add(LinearNode(name="lin0", op="linear", inputs=["x"], outputs=["y"],
+                     weight=np.full((d_in, d_out), w, np.float32),
+                     bias=np.zeros(d_out, np.float32),
+                     w_fmt=w_fmt, in_fmt=in_fmt, out_fmt=out_fmt),
+          Edge("y", (d_out,), edge_out_fmt or out_fmt))
+    g.outputs = ["y"]
+    return g
+
+
+def _error_rules(report):
+    return sorted({d.rule for d in report.errors})
+
+
+# --------------------------------------------------------------------------- #
+# Zero false positives on the shipped designs
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("arch", ["elastic-lstm", "elastic-conv1d"])
+def test_shipped_designs_analyze_clean(arch):
+    g, _, _ = canonical_graph(arch)
+    rep = analyze_graph(g)
+    assert rep.passed, rep.format()
+    assert rep.errors == []
+    assert set(rep.intervals) == set(g.edges)
+    assert rep.resources["fits"]
+    assert rep.resources["cycles"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# Soundness: every emulator-observed value lies inside the static interval
+# --------------------------------------------------------------------------- #
+
+
+def _assert_sound(g, *, n_random=8, seed=0):
+    rep = analyze_graph(g)
+    e = g.edges[g.inputs[0]]
+    stim = stimulus_codes(tuple(e.shape), e.fmt, n_random=n_random,
+                          seed=seed)
+    for mode in MODES:
+        exe = RTLExecutable(graph=g, artifacts={}, hw=XC7S15,
+                            emulator_mode=mode)
+        trace = exe.emulator.run_int(stim).trace
+        for edge, (lo, hi) in rep.intervals.items():
+            v = np.asarray(trace[edge])
+            assert lo <= v.min() and v.max() <= hi, (
+                f"{g.name}:{edge} ({mode}): observed "
+                f"[{v.min()}, {v.max()}] escapes static [{lo}, {hi}]")
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000))
+def test_soundness_fuzz_probe_graphs(seed):
+    for g in _probe_graphs(seed):
+        _assert_sound(g, seed=seed)
+
+
+@pytest.mark.parametrize("arch", ["elastic-lstm", "elastic-conv1d"])
+def test_soundness_canonical_designs(arch):
+    g, _, _ = canonical_graph(arch)
+    _assert_sound(g, n_random=12, seed=3)
+
+
+# --------------------------------------------------------------------------- #
+# Negative suite: one deliberately broken design per EAI rule
+# --------------------------------------------------------------------------- #
+
+
+def test_eai001_accumulator_overflow():
+    wide = FxpFormat(16, 0)
+    g = _linear_graph(w=30000.0, w_fmt=wide, in_fmt=wide, out_fmt=wide)
+    rep = analyze_graph(g)
+    assert _error_rules(rep) == ["EAI001"]
+    (d,) = [x for x in rep.diagnostics if x.rule == "EAI001"]
+    assert d.node == "lin0" and "int32" in d.message
+    assert "fan_in" in d.hint                 # the rule-table fix hint rides
+
+
+def test_eai002_requant_shift_out_of_range():
+    deep = FxpFormat(32, 31)
+    # zero weights: the only defect is the 31+31-0 = 62-bit shift
+    g = _linear_graph(w=0.0, w_fmt=deep, in_fmt=deep, out_fmt=FxpFormat(8, 0))
+    rep = analyze_graph(g)
+    assert _error_rules(rep) == ["EAI002"]
+    assert "outside the int32 shifter range" in rep.errors[0].message
+
+
+def test_eai002_widening_shift_overflows():
+    wide = FxpFormat(16, 0)
+    # |acc| ~ 4*100*32767 ≈ 1.3e7 fits int32, but << 8 does not
+    g = _linear_graph(w=100.0, w_fmt=wide, in_fmt=wide,
+                      out_fmt=FxpFormat(32, 8))
+    rep = analyze_graph(g)
+    assert _error_rules(rep) == ["EAI002"]
+    assert "widening requant shift" in rep.errors[0].message
+
+
+def test_eai003_format_mismatch():
+    g = _linear_graph(w=0.1, edge_out_fmt=FxpFormat(8, 4))
+    rep = analyze_graph(g)
+    assert _error_rules(rep) == ["EAI003"]
+    d = rep.errors[0]
+    assert d.edge == "y" and "expects" in d.message
+
+
+def test_eai004_lut_domain_not_covered():
+    g = get_template("lstm_cell").probe_graph(np.random.default_rng(0))
+    # shrink the sigmoid ROM's address range below the gate format: the
+    # Q8.4 pre-activation interval (±128 codes) escapes a Q6.4 ROM (±32)
+    g.node("hard_sigmoid_lut").in_fmt = FxpFormat(6, 4)
+    rep = analyze_graph(g)
+    assert _error_rules(rep) == ["EAI004"]
+    assert "address range" in rep.errors[0].message
+
+
+def test_eai005_resource_overflow():
+    # 2000x200 8-bit weights = 3.2 Mbit ≈ 87 BRAM36 on a 10-BRAM part;
+    # zero weights keep every interval rule quiet
+    g = _linear_graph(w=0.0, d_in=2000, d_out=200)
+    rep = analyze_graph(g)
+    assert _error_rules(rep) == ["EAI005"]
+    d = rep.errors[0]
+    assert "bram36" in d.message and "exceeds" in d.message
+    assert not rep.resources["fits"]
+
+
+def test_eai006_output_saturation_is_a_warning():
+    # acc ≈ 4*64*127 fits int32, but the post-shift interval (±508)
+    # exceeds the declared Q8.4 output edge
+    g = _linear_graph(w=1.0, out_fmt=FxpFormat(8, 4))
+    rep = analyze_graph(g)
+    assert rep.passed                       # warnings never fail a design
+    assert rep.rules_fired() == ["EAI006"]
+    assert rep.warnings[0].edge == "y"
+
+
+def test_eai007_resource_pressure_is_a_warning():
+    # 900x48 8-bit weights + biases = 347136 bits = exactly 10/10 BRAM36
+    g = _linear_graph(w=0.0, d_in=900, d_out=48)
+    rep = analyze_graph(g)
+    assert rep.passed
+    assert rep.rules_fired() == ["EAI007"]
+    assert "90%" in RULES["EAI007"].hint
+
+
+def test_every_rule_has_negative_coverage():
+    """The rule table and this suite cannot drift apart silently."""
+    import pathlib
+
+    src = pathlib.Path(__file__).read_text(encoding="utf-8")
+    for rule in RULES:
+        assert f"def test_{rule.lower()}" in src, f"no negative test {rule}"
+
+
+# --------------------------------------------------------------------------- #
+# Malformed graphs and unknown kinds raise, listing what IS known
+# --------------------------------------------------------------------------- #
+
+
+def test_unknown_kind_lists_registered():
+    g = Graph(name="bad")
+    fmt = FxpFormat(8, 4)
+    g.edges["x"] = Edge("x", (4,), fmt)
+    g.inputs = ["x"]
+    n = LinearNode(name="l", op="linear", inputs=["x"], outputs=["y"],
+                   weight=np.zeros((4, 2), np.float32),
+                   bias=np.zeros(2, np.float32))
+    g.add(n, Edge("y", (2,), fmt))
+    g.outputs = ["y"]
+    n.op = "linnear"
+    with pytest.raises(ValueError, match="registered templates"):
+        analyze_graph(g)
+
+
+def test_malformed_graph_errors_list_declared_edges():
+    fmt = FxpFormat(8, 4)
+
+    def base():
+        g = Graph(name="bad")
+        g.edges["x"] = Edge("x", (4,), fmt)
+        g.inputs = ["x"]
+        g.add(LinearNode(name="l", op="linear", inputs=["x"],
+                         outputs=["y"],
+                         weight=np.zeros((4, 2), np.float32),
+                         bias=np.zeros(2, np.float32),
+                         in_fmt=fmt, out_fmt=fmt),
+              Edge("y", (2,), fmt))
+        g.outputs = ["y"]
+        return g
+
+    g = base()
+    g.inputs = ["ghost"]
+    with pytest.raises(ValueError, match="declared edges.*'x'"):
+        analyze_graph(g)
+    g = base()
+    g.outputs = ["ghost"]
+    with pytest.raises(ValueError, match="undeclared"):
+        analyze_graph(g)
+    g = base()
+    g.node("l").inputs[0] = "y"             # self-driven: nothing drives y
+    with pytest.raises(ValueError, match="driven so far"):
+        analyze_graph(g)
+    g = base()
+    del g.edges["y"]
+    with pytest.raises(ValueError, match="undeclared"):
+        analyze_graph(g)
+
+
+def test_act_apply_unknown_lut_lists_present():
+    g = get_template("act_apply").probe_graph(np.random.default_rng(0))
+    g.node("act_0").lut = "missing_lut"
+    with pytest.raises(ValueError, match="act_lut nodes present"):
+        analyze_graph(g)
+
+
+# --------------------------------------------------------------------------- #
+# Interval algebra + report plumbing
+# --------------------------------------------------------------------------- #
+
+
+def test_interval_algebra():
+    a, b = Interval(-3, 5), Interval(2, 4)
+    assert a.add(b) == Interval(-1, 9)
+    assert a.mul(b) == Interval(-12, 20)
+    assert Interval(-1, 2).lshift(3) == Interval(-8, 16)
+    assert a.join(Interval(7, 9)) == Interval(-3, 9)
+    assert Interval(-500, 500).clip(FxpFormat(8, 0)) == Interval(-128, 127)
+    assert Interval.full(FxpFormat(8, 0)).covers(Interval(-128, 127))
+    assert not Interval(0, 1).covers(Interval(0, 2))
+    with pytest.raises(ValueError, match="empty"):
+        Interval(3, 2)
+    with pytest.raises(ValueError, match="lshift"):
+        Interval(0, 1).lshift(-1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(-(2 ** 31), 2 ** 31 - 1), st.integers(1, 31))
+def test_requant_interval_bounds_round_half_even(v, shift):
+    """The [lo >> s, (hi >> s) + 1] bound really contains the emulator's
+    round-half-even shift of every point in the interval."""
+    from repro.quant.fixedpoint import fxp_requant_int
+
+    iv = requant_interval(Interval(v, v), shift)
+    wide = FxpFormat(32, 0)                  # clip never binds at 32 bits
+    got = int(np.asarray(fxp_requant_int(np.int32(v), shift, wide)))
+    assert iv.contains(got), (v, shift, got, iv)
+
+
+def test_worst_case_mac_bound_formula():
+    assert worst_case_mac_bound(4, FxpFormat(8, 6), FxpFormat(8, 4),
+                                b_magnitude=10) == 4 * 128 * 128 + 10
+
+
+def test_report_json_round_trip():
+    g, _, _ = canonical_graph("elastic-lstm")
+    rep = analyze_graph(g)
+    back = AnalysisReport.from_json(rep.to_json())
+    assert back.design == rep.design and back.hw == rep.hw
+    assert back.intervals == rep.intervals
+    assert back.resources == rep.resources
+    assert [d.to_dict() for d in back.diagnostics] == \
+        [d.to_dict() for d in rep.diagnostics]
+    with pytest.raises(ValueError, match="format_version"):
+        AnalysisReport.from_dict({**rep.to_dict(), "format_version": 99})
+
+
+def test_diagnostic_contract():
+    d = make_diagnostic("EAI001", "node0", "boom", edge="e0")
+    assert d.severity == "error" and d.hint == RULES["EAI001"].hint
+    assert d.format("dsn") == "dsn:node0:e0: EAI001 [error] boom"
+    assert Diagnostic.from_dict(d.to_dict()) == d
+    with pytest.raises(ValueError, match="known rules"):
+        make_diagnostic("EAI999", "n", "m")
+    with pytest.raises(ValueError, match="severity"):
+        Diagnostic(rule="EAI001", severity="fatal", node="n", message="m")
+
+
+def test_default_transfer_is_sound_for_custom_templates():
+    """A third-party template without a transfer override gets the
+    full-format interval for its outputs — wide, but sound."""
+    from repro.rtl.oplib import HWTemplate
+    from repro.rtl.ir import Node
+
+    class NopTemplate(HWTemplate):
+        kind = "nop"
+        node_cls = Node
+
+    g = Graph(name="custom")
+    fmt = FxpFormat(8, 4)
+    g.edges["x"] = Edge("x", (4,), fmt)
+    g.inputs = ["x"]
+    g.add(Node(name="n0", op="nop", inputs=["x"], outputs=["y"]),
+          Edge("y", (4,), fmt))
+    g.outputs = ["y"]
+    iv = NopTemplate().transfer(g.node("n0"), {"x": Interval(0, 1)},
+                                graph=g, ctx=None)
+    assert iv == {"y": Interval(fmt.lo, fmt.hi)}
+    assert NopTemplate().wire_contract(g.node("n0"), g) == {}
+
+
+# --------------------------------------------------------------------------- #
+# Degenerate edges (satellite fix)
+# --------------------------------------------------------------------------- #
+
+
+def test_edge_bits_and_brams_degenerate():
+    from repro.rtl.resources import brams_for
+
+    fmt = FxpFormat(8, 4)
+    assert Edge("s", (), fmt).bits == 8          # scalar: one element
+    assert Edge("z", (0, 3), fmt).bits == 0      # zero-element: no storage
+    assert brams_for(0) == 0
+    assert brams_for(1) == 1
+    with pytest.raises(ValueError, match="bits >= 0"):
+        brams_for(-1)
+    with pytest.raises(ValueError, match="negative dim"):
+        _ = Edge("n", (-2, 3), fmt).bits
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end gates: translate, save, Workflow, CLI
+# --------------------------------------------------------------------------- #
+
+
+def test_translate_gate_modes(tmp_path):
+    cfg = get_config("elastic-lstm")
+    from repro.model.lstm import lstm_schema
+
+    params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+    _, exe = translate_rtl(cfg, params)                  # default: "error"
+    assert exe.analysis is not None and exe.analysis.passed
+    exe.save(str(tmp_path))
+    data = json.loads((tmp_path / "analysis.json").read_text())
+    assert data["design"] == "elastic-lstm" and data["passed"]
+    _, exe_off = translate_rtl(cfg, params, analyze="off")
+    assert exe_off.analysis is None
+    with pytest.raises(ValueError, match="analyze must be one of"):
+        translate_rtl(cfg, params, analyze="bogus")
+    with pytest.raises(ValueError, match="analyze must be one of"):
+        RTLOptions(analyze="bogus")
+
+
+def test_translate_gate_fails_fast_and_warns(monkeypatch):
+    """A failing design raises under "error" (before emit) and warns under
+    "warn" — driven by forcing the analyzer to find a defect."""
+    import repro.rtl.backend as backend
+
+    cfg = get_config("elastic-lstm")
+    from repro.model.lstm import lstm_schema
+
+    params = init_params(lstm_schema(cfg), jax.random.PRNGKey(0))
+
+    real = backend.analyze_graph
+
+    def sabotaged(graph, **kw):
+        rep = real(graph, **kw)
+        rep.diagnostics.append(make_diagnostic(
+            "EAI001", "lstm_cell_l0", "forced failure for the gate test"))
+        return rep
+
+    monkeypatch.setattr(backend, "analyze_graph", sabotaged)
+    with pytest.raises(AnalysisError, match="EAI001") as ei:
+        translate_rtl(cfg, params)
+    assert not ei.value.report.passed
+    with pytest.warns(UserWarning, match="EAI001"):
+        _, exe = translate_rtl(cfg, params, analyze="warn")
+    assert exe.analysis is not None and not exe.analysis.passed
+
+
+def _workflow_for(arch, target, analyze):
+    from repro.core.report import DesignReport
+    from repro.core.workflow import Workflow
+
+    cfg = get_config(arch)
+    if cfg.family == "lstm":
+        from repro.model.lstm import lstm_flops, lstm_schema
+
+        schema, flops = lstm_schema(cfg), float(lstm_flops(cfg))
+        shape = SHAPES_LSTM["infer_1"]
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 1))
+
+        def fn(p, xx):
+            from repro.model.lstm import lstm_apply
+
+            return lstm_apply(p, xx, cfg)[0]
+    else:
+        from repro.model.conv1d import (conv1d_apply, conv1d_flops,
+                                        conv1d_schema)
+
+        schema, flops = conv1d_schema(cfg), float(conv1d_flops(cfg))
+        shape = SHAPES_CONV1D["infer_1"]
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, cfg.conv1d.seq_len, cfg.conv1d.channels))
+
+        def fn(p, xx):
+            return conv1d_apply(p, xx, cfg)[0]
+
+    def train_fn(knobs):
+        params = init_params(schema, jax.random.PRNGKey(0))
+        return params, DesignReport(model=cfg.name, train_loss=0.0,
+                                    eval_loss=0.0), None
+
+    def step_builder(knobs, params):
+        if target == "rtl":
+            return None, (params, x), flops
+        return fn, (params, x), flops
+
+    return Workflow(
+        creator=Creator(hw=XC7S15), train_fn=train_fn,
+        step_builder=step_builder,
+        stepper_builder=(lambda knobs: Creator(hw=XC7S15).build(cfg, shape))
+        if target == "rtl" else None,
+        target=target, analyze=analyze)
+
+
+@pytest.mark.parametrize("arch", ["elastic-lstm", "elastic-conv1d"])
+@pytest.mark.parametrize("target", ["xla", "rtl"])
+def test_workflow_analyze_stage(arch, target):
+    wf = _workflow_for(arch, target, analyze="error" if target == "rtl"
+                       else "off")
+    rec = wf.run_once({})
+    if target == "rtl":
+        assert rec.analysis is not None
+        assert rec.analysis.passed and rec.analysis.design == arch
+    else:
+        assert rec.analysis is None          # XLA lowers no dataflow graph
+
+
+def test_workflow_analyze_off_and_unsupported():
+    wf = _workflow_for("elastic-lstm", "rtl", analyze="off")
+    rec = wf.run_once({})
+    assert rec.analysis is None
+    wf_xla = _workflow_for("elastic-lstm", "xla", analyze="error")
+    with pytest.raises(ValueError, match="no 'analyze' field"):
+        wf_xla.run_once({})
+
+
+def test_lint_cli(tmp_path, capsys):
+    from repro.rtl import lint
+
+    assert lint.main(["--arch", "lstm"]) == 0
+    out = capsys.readouterr().out
+    assert "elastic-lstm: static analysis clean" in out
+    path = tmp_path / "analysis.json"
+    assert lint.main(["--json", str(path)]) == 0
+    data = json.loads(path.read_text())
+    assert sorted(r["design"] for r in data) == \
+        ["elastic-conv1d", "elastic-lstm"]
+    assert all(r["passed"] for r in data)
+    capsys.readouterr()
+    assert lint.main(["--arch", "nope"]) == 2
+    assert "known archs" in capsys.readouterr().err
+    assert lint.resolve_arch("conv1d") == "elastic-conv1d"
+    assert lint.resolve_arch("elastic-lstm") == "elastic-lstm"

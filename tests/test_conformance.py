@@ -215,7 +215,7 @@ def test_checked_in_golden_vectors_replay(arch, tmp_path):
         have = open(os.path.join(str(tmp_path), arch, name), "rb").read()
         assert have == want, (
             f"{arch}/{name} drifted from tests/golden/vectors — if the "
-            f"change is intentional, regenerate via "
+            "change is intentional, regenerate via "
             f"repro.verify.emit_golden({arch!r}, 'tests/golden/vectors')")
     vs = load_vectors(golden_dir)
     assert vs.n_vectors == got.n_vectors

@@ -1,6 +1,5 @@
 """Grouped-GQA attention (no repeated K/V) must match the repeat-based
 reference exactly — fwd, decode-with-cache, and grads."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -10,13 +10,13 @@ from repro.kernels.lstm_cell.ops import lstm_window
 from repro.kernels.lstm_cell.ref import lstm_window_ref
 from repro.kernels.lstm_cell_int import (CellSpec, lstm_window_int,
                                          lstm_window_int_ref)
-from repro.quant.fixedpoint import FxpFormat
 from repro.kernels.mamba2.ops import ssd
 from repro.kernels.quant_matmul.ops import quant_matmul
 from repro.kernels.quant_matmul.ref import quant_matmul_ref, quantize_act
 from repro.kernels.rwkv6.ops import wkv6
 from repro.model.rwkv import wkv6_reference
 from repro.model.ssm import ssd_reference
+from repro.quant.fixedpoint import FxpFormat
 from repro.quant.ptq import quantize_params_int8
 
 

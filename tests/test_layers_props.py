@@ -1,7 +1,6 @@
 """Property tests on core layer invariants (hypothesis)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 try:
     from hypothesis import given, settings
@@ -10,8 +9,7 @@ except ImportError:                       # image lacks hypothesis: use shim
     from _hypothesis_compat import given, settings, st
 
 from repro.core.types import ModelConfig
-from repro.model.layers import (apply_norm, apply_rope, norm_schema,
-                                rope_angles, shard_axis)
+from repro.model.layers import apply_norm, apply_rope, rope_angles, shard_axis
 
 
 def _cfg(norm="rmsnorm"):

@@ -8,11 +8,10 @@ import json
 import numpy as np
 import pytest
 
-from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry, RunTrace,
-                       Tracer, ancestors, capture, children_of,
-                       find_spans, from_chrome_trace, get_metrics,
-                       get_tracer, percentile, set_metrics, set_tracer,
-                       span_tree, to_chrome_trace, to_jsonl)
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry, RunTrace, Tracer,
+                       ancestors, capture, children_of, find_spans, from_chrome_trace,
+                       get_metrics, get_tracer, percentile, set_tracer, span_tree,
+                       to_chrome_trace, to_jsonl)
 
 
 class FakeClock:

@@ -10,8 +10,7 @@ except ImportError:                       # image lacks hypothesis: use shim
     from _hypothesis_compat import given, settings, st
 
 from repro.data.pipeline import (LMDataConfig, Prefetcher, lm_batch_for_step,
-                                 make_lm_iterator, traffic_flow_batch,
-                                 TrafficConfig)
+                                 traffic_flow_batch, TrafficConfig)
 from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
                                opt_state_schema, schedule)
 

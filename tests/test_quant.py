@@ -1,16 +1,14 @@
 """Quantization: fixed-point properties (hypothesis), QAT training, int8 PTQ."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
 except ImportError:                       # image lacks hypothesis: use shim
     from _hypothesis_compat import given, settings, st
 
-from repro.quant.fixedpoint import (FxpFormat, fake_quant, fxp_quantize,
-                                    fxp_to_int, pick_frac_bits, quant_error)
+from repro.quant.fixedpoint import (FxpFormat, fake_quant, fxp_quantize, fxp_to_int,
+                                    pick_frac_bits)
 from repro.quant.ptq import (dequantize_params, int8_matmul_ref,
                              quantize_params_int8)
 from repro.quant.qat import QATConfig, hard_sigmoid, hard_tanh
@@ -87,7 +85,7 @@ def test_qat_lstm_trains(par_f32):
         return p2, o2, loss
 
     first = None
-    for i in range(80):
+    for _ in range(80):
         params, opt, loss = step(params, opt)
         if first is None:
             first = float(loss)

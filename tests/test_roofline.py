@@ -1,7 +1,6 @@
 """Collective parser + roofline math on handcrafted and real HLO."""
 import jax
 import jax.numpy as jnp
-import pytest
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

@@ -22,9 +22,8 @@ from repro.model.lstm import lstm_flops, lstm_schema
 from repro.quant.fixedpoint import FxpFormat, fxp_requant_int, fxp_quantize
 from repro.rtl import (ActLUTNode, Conv1dNode, ElementwiseNode, Graph, Edge,
                        LinearNode, LSTMCellNode, RTLEmulator, RTLOptions,
-                       assert_bit_exact, emit_graph, estimate,
-                       lower_conv_stack, lower_linear_stack, lower_model,
-                       node_cost, reference_apply, synthesize,
+                       assert_bit_exact, emit_graph, estimate, lower_conv_stack,
+                       lower_linear_stack, lower_model, node_cost, synthesize,
                        validate_formats)
 
 
@@ -387,8 +386,10 @@ def test_rtl_executable_save(tmp_path):
     st_ = cr.build(get_config("elastic-lstm"), SHAPES_LSTM["infer_1"])
     _, exe = cr.translate(st_, target="rtl")
     exe.save(str(tmp_path))
-    files = list(tmp_path.iterdir())
-    assert len(files) == len(exe.artifacts)
+    files = {p.name for p in tmp_path.iterdir()}
+    # artifacts + the static verifier's report (DESIGN.md §13)
+    assert files == set(exe.artifacts) | {"analysis.json"}
+    assert exe.analysis is not None and exe.analysis.passed
     assert exe.cycles > 0
 
 
@@ -664,7 +665,9 @@ def test_conv1d_end_to_end_deployment(tmp_path):
                        model_flops=float(conv1d_flops(cfg)), n_runs=2)
     assert meas.target == "rtl" and meas.latency_s > 0
     dep.save(str(tmp_path))
-    assert len(list(tmp_path.iterdir())) == len(dep.artifacts)
+    # every artifact, plus the static-analysis report save() adds
+    assert ({p.name for p in tmp_path.iterdir()}
+            == set(dep.artifacts) | {"analysis.json"})
 
 
 def test_workflow_roundtrip_target_rtl_conv1d():

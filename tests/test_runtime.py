@@ -1,6 +1,4 @@
 """Fault-tolerant trainer + batched server."""
-import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config

@@ -9,7 +9,6 @@ from repro.configs import ALL_IDS, get_config
 from repro.core.types import SMOKE_MESH, ParallelismConfig, ShapeConfig
 from repro.model.lm import Stepper, make_loss_fn, make_prefill_step, \
     make_decode_step
-from repro.model.transformer import pad_cache
 
 ARCHS = [a for a in ALL_IDS if a not in ("elastic-lstm", "elastic-conv1d")]
 

@@ -1,7 +1,6 @@
 """Deployment-target API: registry, options validation, the uniform
 Deployment artifact, and the deprecation shims over the old backend= API."""
 import json
-import warnings
 
 import jax
 import numpy as np
@@ -123,8 +122,11 @@ def test_rtl_deployment_contract_and_save_round_trip(tmp_path):
     y = dep(x)                                   # callable on inputs
     assert np.asarray(y).shape[0] == 2
     # artifact round-trip: every emitted file lands on disk byte-identical
+    # (save() adds the static-analysis report alongside the artifacts)
     dep.save(str(tmp_path))
     on_disk = {p.name: p.read_text() for p in tmp_path.iterdir()}
+    analysis = on_disk.pop("analysis.json")
+    assert json.loads(analysis)["design"] == "elastic-lstm"
     assert on_disk == dep.artifacts
     man = json.loads(on_disk["manifest.json"])
     assert man["total_macs"] > 0

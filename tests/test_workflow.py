@@ -6,7 +6,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.creator import Creator
 from repro.core.registry import validate_config
-from repro.core.report import DesignReport, compare
+from repro.core.report import DesignReport
 from repro.core.workflow import Requirement, Workflow
 from repro.data.pipeline import TrafficConfig, traffic_flow_batch
 from repro.model.layers import init_params
@@ -35,7 +35,7 @@ def _train(knobs):
         return p2, o2, loss
 
     first = last = None
-    for i in range(60):
+    for _ in range(60):
         params, opt, loss = step(params, opt)
         first = first if first is not None else float(loss)
         last = float(loss)
