@@ -160,6 +160,20 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("Serving farm: mixed lstm+conv1d micro-batched throughput")
+    print("=" * 72)
+    from benchmarks import serving_throughput
+
+    sv = serving_throughput.run(requests=1024)
+    _sv_tput = sv["steady_state"]["throughput_windows_per_s"] or 0.0
+    rows.append(("serving_mixed", 1e6 / _sv_tput if _sv_tput else 0.0,
+                 f"windows_per_s={_sv_tput:.0f}_"
+                 f"p99_ms={sv['steady_state']['latency_p99_s']*1e3:.1f}_"
+                 f"speedup_b32=x{sv['speedup_batch32_vs_unbatched']:.1f}_"
+                 f"dropped={sv['steady_state']['dropped_after_admission']}"))
+
+    print()
+    print("=" * 72)
     print("Data pipeline + trainer step (smoke scale)")
     print("=" * 72)
     import jax

@@ -145,8 +145,14 @@ class Deployment:
         return self
 
     def measure(self, args, *, model: str, model_flops: float,
-                n_runs: int = DEFAULT_N_RUNS,
+                n_runs: int = DEFAULT_N_RUNS, warmup: int = 1,
                 hw: Optional[HWSpec] = None) -> MeasurementReport:
+        """Execute ``warmup`` unrecorded runs, then ``n_runs`` timed ones.
+
+        Warmup runs are part of the contract, not a courtesy: compile /
+        trace / first-touch cost must be excluded from the latency samples,
+        so ``latency_p50_s``/``latency_p99_s`` characterize steady-state
+        tails only (the serving layer's admission decisions read them)."""
         raise NotImplementedError
 
     def save(self, build_dir: str) -> None:
@@ -210,17 +216,20 @@ class XLADeployment(Deployment):
         return dataclasses.replace(self, fn=fn)
 
     def measure(self, args, *, model: str, model_flops: float,
-                n_runs: int = DEFAULT_N_RUNS,
+                n_runs: int = DEFAULT_N_RUNS, warmup: int = 1,
                 hw: Optional[HWSpec] = None) -> MeasurementReport:
         """Time ``n_runs`` executions, keeping every per-run latency (each
         run is individually synchronized) so the report carries real
-        p50/p99 tail percentiles, not just the mean."""
+        p50/p99 tail percentiles, not just the mean. The ``warmup`` runs
+        execute first and never enter the samples — compile time is a
+        deployment cost, not a steady-state tail."""
         hw = hw or self.hw
         n_runs = max(1, n_runs)
-        out = self.fn(*args)
-        jax.block_until_ready(out)              # warm: compile once
         samples = []
-        with get_tracer().span("xla.measure", model=model, n_runs=n_runs):
+        with get_tracer().span("xla.measure", model=model, n_runs=n_runs,
+                               warmup=warmup):
+            for _ in range(max(0, warmup)):     # excluded from percentiles
+                jax.block_until_ready(self.fn(*args))
             for _ in range(n_runs):
                 t0 = time.perf_counter()
                 out = self.fn(*args)

@@ -18,6 +18,14 @@ Overhead contract: with tracing disabled (the default) every instrumented
 site costs one function call and one attribute check — the fused-emulator
 throughput trajectory (``BENCH_rtl_emulator.json``) is the regression
 guard.
+
+Metric namespaces by layer: ``rtl.*`` (emulator), ``measure.*``
+(Deployment.measure), ``resilience.*`` (guards, §12), ``server.*`` (the
+batched LM server + the pool shims), and ``serving.*`` (the accelerator
+farm, §14: ``serving.queue.admitted/shed_full/expired/depth``, per-router
+``serving.router.<design>.<len>.affinity_hit|miss``, histograms
+``serving.latency_s[.<design>]``, ``serving.queue_wait_s``,
+``serving.batch_fill``, ``serving.batch_size``).
 """
 from repro.obs.export import RunTrace, capture  # noqa: F401
 from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401

@@ -120,13 +120,21 @@ class RTLExecutable(Deployment):
         """Batched-throughput entry: see :meth:`RTLEmulator.run_many`."""
         return self.emulator.run_many(xs)
 
+    def holds_program(self, shape, dtype) -> bool:
+        """Serving-router affinity probe: is a program for this float input
+        ``(shape, dtype)`` already compiled? Float inputs quantize to int32
+        before dispatch, so the emulator key is ``(shape, int32)``."""
+        import jax.numpy as jnp
+
+        return self.emulator.has_program(shape, jnp.int32)
+
     @property
     def cycles(self) -> int:
         return estimate(self.graph,
                         clock_hz=self.hw.clock_hz or 100e6).cycles
 
     def measure(self, args, *, model: str, model_flops: float,
-                n_runs: int = DEFAULT_N_RUNS,
+                n_runs: int = DEFAULT_N_RUNS, warmup: int = 1,
                 hw: Optional[HWSpec] = None) -> MeasurementReport:
         """Stage 3 on the generated accelerator: execute the emulator (the
         deployed design's proxy) ``n_runs`` times, then read latency/power
@@ -138,6 +146,10 @@ class RTLExecutable(Deployment):
         step_builder, are already baked into the deployed design). Repeats
         replay the emulator's compiled program — no retrace, no weight
         re-upload — so the unified ``n_runs`` default is cheap here too.
+
+        ``warmup`` runs execute first and are **excluded** from the latency
+        samples (and thus from ``latency_p50/p99_s``): compile/trace time
+        is a deployment cost, not a per-request tail.
         """
         import time
 
@@ -149,8 +161,10 @@ class RTLExecutable(Deployment):
         rr = estimate(self.graph, clock_hz=clock)
         n_runs = max(1, n_runs)
         samples = []
-        with get_tracer().span("rtl.measure", model=model, n_runs=n_runs):
-            jax.block_until_ready(self(x))      # warm: compile/trace once
+        with get_tracer().span("rtl.measure", model=model, n_runs=n_runs,
+                               warmup=warmup):
+            for _ in range(max(0, warmup)):     # excluded from percentiles
+                jax.block_until_ready(self(x))
             for _ in range(n_runs):             # actually execute the design
                 t0 = time.perf_counter()
                 out = self(x)

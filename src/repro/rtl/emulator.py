@@ -166,6 +166,15 @@ class RTLEmulator:
             self._programs[key] = prog       # (re)insert most-recently-used
         return prog, hit
 
+    def has_program(self, shape, dtype) -> bool:
+        """Whether the LRU already holds a compiled program for this
+        ``(shape, dtype)`` key — the serving router's affinity probe
+        (:mod:`repro.serving.router`). Read-only: does not touch LRU
+        order, so probing every pool member is side-effect free."""
+        key = (tuple(int(d) for d in shape), jnp.dtype(dtype).name)
+        with self._lock:
+            return key in self._programs
+
     def cache_stats(self) -> Dict[str, int]:
         """Program-cache behavior + per-mode dispatch counts, one dict."""
         with self._lock:

@@ -14,6 +14,7 @@ pad is a no-op. Greedy or temperature sampling.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -25,6 +26,9 @@ from repro.core.types import MeshConfig, ModelConfig, ParallelismConfig
 from repro.model.lm import make_decode_step, make_prefill_step
 from repro.model.transformer import pad_cache
 from repro.obs import MetricsRegistry, get_tracer
+# PoolStats is re-exported from its new home so old imports keep working
+from repro.serving.pool import DeploymentPool as _ServingPool
+from repro.serving.pool import PoolStats  # noqa: F401  (compat re-export)
 
 
 @dataclass
@@ -268,152 +272,30 @@ class Server:
                                   key=lambda r: r.rid), self.stats())
 
 
-@dataclass
-class PoolStats:
-    """What a :class:`DeploymentPool` run actually did."""
+class DeploymentPool(_ServingPool):
+    """Deprecated import site for the health-aware pool.
 
-    ticks: int = 0
-    submitted: int = 0
-    served_ok: int = 0
-    served_degraded: int = 0
-    shed: int = 0
-    lost: int = 0
-    max_queue_depth: int = 0
-
-
-class DeploymentPool:
-    """Health-aware serving over a pool of (guarded) deployments.
-
-    The fleet-scale pattern on top of the uniform Deployment contract: each
-    member is typically a :class:`~repro.resilience.GuardedDeployment`
-    (breaker + canary + fallback), and the pool's job is *admission* and
-    *backpressure*:
-
-    * requests land in a bounded queue — a full queue **sheds at submit**
-      (bounded backpressure, not an unbounded pile-up or a hard raise);
-    * each :meth:`tick` dispatches queued requests round-robin across the
-      members whose ``can_serve()`` says they can answer (a quarantined,
-      fallback-less member takes no traffic — health-aware admission);
-    * with *no* serveable member, the queue ages; requests older than
-      ``max_wait_ticks`` are shed — sustained breaker-open turns into
-      load-shedding instead of latency creep.
-
-    Members are duck-typed: ``can_serve()``/``call()`` are used when
-    present (GuardedDeployment), plain callables serve unconditionally —
-    so an unguarded Deployment can stand in a pool too.
+    The pool lives in :mod:`repro.serving.pool` now, rebuilt on the shared
+    serving primitives (admission queue + router); this subclass keeps the
+    old constructor and ``run_until_drained`` spellings alive as thin
+    forwarding shims. Import :class:`repro.serving.DeploymentPool` and call
+    :meth:`~repro.serving.pool.DeploymentPool.drain` instead.
     """
 
     def __init__(self, members, *, max_queue: int = 64,
                  max_wait_ticks: Optional[int] = None,
                  metrics: Optional[MetricsRegistry] = None):
-        if not members:
-            raise ValueError("DeploymentPool needs at least one member")
-        if max_queue < 1:
-            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
-        self.members = list(members)
-        self.max_queue = max_queue
-        self.max_wait_ticks = max_wait_ticks
-        self.metrics = metrics if metrics is not None else MetricsRegistry()
-        self._queue: List[tuple] = []    # (rid, args, enqueued_at_tick)
-        self._next_rid = 0
-        self._rr = 0                     # round-robin cursor
-        self.ticks = 0
-        self.results: Dict[int, dict] = {}
-
-    # -- admission ------------------------------------------------------ #
-    def submit(self, *args) -> int:
-        """Enqueue one request; a full queue sheds it immediately (the
-        result records ``status="shed"``). Returns the request id either
-        way — the caller learns the outcome from :meth:`result`."""
-        rid = self._next_rid
-        self._next_rid += 1
-        self.metrics.counter("server.pool.submitted").inc()
-        if len(self._queue) >= self.max_queue:
-            self.metrics.counter("server.pool.shed").inc()
-            self.results[rid] = {"rid": rid, "status": "shed",
-                                 "reason": "queue_full"}
-            return rid
-        self._queue.append((rid, args, self.ticks))
-        self.metrics.gauge("server.pool.queue_depth").set(len(self._queue))
-        return rid
-
-    def result(self, rid: int) -> Optional[dict]:
-        return self.results.get(rid)
-
-    def _serveable(self) -> List[int]:
-        return [i for i, m in enumerate(self.members)
-                if not hasattr(m, "can_serve") or m.can_serve()]
-
-    # -- dispatch ------------------------------------------------------- #
-    def tick(self) -> int:
-        """One scheduling round: age-shed, then dispatch up to one request
-        per serveable member (round-robin). Returns requests served."""
-        self.ticks += 1
-        self.metrics.counter("server.pool.ticks").inc()
-        if self.max_wait_ticks is not None:
-            fresh = []
-            for rid, args, t in self._queue:
-                if self.ticks - t > self.max_wait_ticks:
-                    self.metrics.counter("server.pool.shed").inc()
-                    self.results[rid] = {"rid": rid, "status": "shed",
-                                         "reason": "max_wait_ticks"}
-                else:
-                    fresh.append((rid, args, t))
-            self._queue = fresh
-        healthy = self._serveable()
-        self.metrics.gauge("server.pool.healthy_members").set(len(healthy))
-        served = 0
-        for k in range(len(healthy)):
-            if not self._queue:
-                break
-            member_i = healthy[(self._rr + k) % len(healthy)]
-            m = self.members[member_i]
-            rid, args, t = self._queue.pop(0)
-            entry = {"rid": rid, "member": member_i,
-                     "waited_ticks": self.ticks - t}
-            try:
-                if hasattr(m, "call"):
-                    res = m.call(*args)
-                    entry.update(value=res.value, source=res.source,
-                                 status=("degraded" if res.degraded
-                                         else "ok"))
-                else:
-                    entry.update(value=m(*args), status="ok")
-            except Exception as e:       # noqa: BLE001 - request is lost
-                entry.update(status="lost", error=type(e).__name__)
-            self.metrics.counter(
-                f"server.pool.{entry['status']}").inc()
-            self.results[rid] = entry
-            served += 1
-        self._rr += served
-        self.metrics.gauge("server.pool.queue_depth").set(len(self._queue))
-        return served
+        warnings.warn(
+            "repro.runtime.server.DeploymentPool moved to "
+            "repro.serving.DeploymentPool (and run_until_drained() to "
+            "drain()); this forwarding shim will be removed",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(members, max_queue=max_queue,
+                         max_wait_ticks=max_wait_ticks, metrics=metrics)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> PoolStats:
-        """Tick until the queue empties (or nothing can serve and aging
-        sheds the rest). Never raises: at ``max_ticks`` the remaining queue
-        is shed and the partial stats returned."""
-        while self._queue and self.ticks < max_ticks:
-            before = len(self._queue)
-            self.tick()
-            if (len(self._queue) == before and not self._serveable()
-                    and self.max_wait_ticks is None):
-                break                    # wedged: no member, no age-out
-        for rid, args, t in self._queue:
-            self.metrics.counter("server.pool.shed").inc()
-            self.results[rid] = {"rid": rid, "status": "shed",
-                                 "reason": "drain_truncated"}
-        self._queue = []
-        return self.stats()
-
-    def stats(self) -> PoolStats:
-        mx = self.metrics
-        g = mx.gauge("server.pool.queue_depth")
-        return PoolStats(
-            ticks=self.ticks,
-            submitted=mx.counter("server.pool.submitted").value,
-            served_ok=mx.counter("server.pool.ok").value,
-            served_degraded=mx.counter("server.pool.degraded").value,
-            shed=mx.counter("server.pool.shed").value,
-            lost=mx.counter("server.pool.lost").value,
-            max_queue_depth=int(g.max) if g.max is not None else 0)
+        warnings.warn(
+            "DeploymentPool.run_until_drained() is deprecated; use "
+            "repro.serving.DeploymentPool.drain()",
+            DeprecationWarning, stacklevel=2)
+        return self.drain(max_ticks)

@@ -1,0 +1,33 @@
+"""Fleet-scale serving over the uniform Deployment API (DESIGN.md §14).
+
+The subsystem that turns single accelerators into a farm: a bounded
+admission queue with deadlines (:mod:`repro.serving.queue`), a dynamic
+micro-batcher packing ragged windows per (design, window-length bucket)
+into single dispatches (:mod:`repro.serving.batcher`), a program-cache
+affinity router over healthy pool members (:mod:`repro.serving.router`),
+the tick-driven farm runtime composing them (:mod:`repro.serving.farm`),
+optional multi-device batch sharding (:mod:`repro.serving.shard`), the
+health-aware :class:`DeploymentPool` rebuilt on the same primitives
+(:mod:`repro.serving.pool`), and the seeded mixed-traffic load generator
+(``python -m repro.serving.loadgen``).
+"""
+from repro.serving.batcher import (MicroBatch, MicroBatcher, bucket_for,
+                                   pack, pad_window, padded_batch_size,
+                                   unpack)
+from repro.serving.farm import (AcceleratorFarm, DesignPool, FarmConfig,
+                                FarmStats)
+from repro.serving.pool import DeploymentPool, PoolStats
+from repro.serving.queue import (DONE, EXPIRED, FAILED, QUEUED, SHED,
+                                 AdmissionQueue, ServeRequest)
+from repro.serving.router import (AffinityRouter, NoServeableMember,
+                                  member_holds_program)
+from repro.serving.shard import ShardedExecutable, make_serving_mesh
+
+__all__ = [
+    "AcceleratorFarm", "AdmissionQueue", "AffinityRouter", "DeploymentPool",
+    "DesignPool", "FarmConfig", "FarmStats", "MicroBatch", "MicroBatcher",
+    "NoServeableMember", "PoolStats", "ServeRequest", "ShardedExecutable",
+    "bucket_for", "make_serving_mesh", "member_holds_program", "pack",
+    "pad_window", "padded_batch_size", "unpack",
+    "QUEUED", "DONE", "SHED", "EXPIRED", "FAILED",
+]

@@ -83,15 +83,6 @@ def _band(name: str, value: float, reference: float, rtol: float,
                          rtol=rtol, passed=ok, enforced=enforced)
 
 
-def _invoke(dep, args):
-    """One warmup execution, following the Deployment calling convention:
-    self-executing targets (RTL) take the trailing positional as the input
-    batch; host-executed targets are called on the full tuple."""
-    if getattr(dep, "graph", None) is not None:
-        return dep(args[-1] if isinstance(args, (tuple, list)) else args)
-    return dep(*args)
-
-
 def run_protocol(dep, args, *, model: str, model_flops: float,
                  hw=None, protocol: Optional[MeasurementProtocol] = None
                  ) -> ProtocolReport:
@@ -101,23 +92,21 @@ def run_protocol(dep, args, *, model: str, model_flops: float,
     phases as children, so the protocol's cost is attributable in a
     captured trace and a band failure points at a visible interval.
     """
-    import jax
-
     from repro.obs import get_tracer
 
     trc = get_tracer()
     proto = protocol or MeasurementProtocol()
     with trc.span("verify.protocol", model=model,
                   target=getattr(dep, "target", "")):
-        with trc.span("verify.protocol.warmup", n=max(0, proto.warmup)):
-            out = None
-            for _ in range(max(0, proto.warmup)):
-                out = _invoke(dep, args)
-            if out is not None:          # drain before the timed region
-                jax.block_until_ready(out)
-        with trc.span("verify.protocol.measure", n_runs=proto.n_runs):
+        # warmup is part of the measure contract now (PR 9): the runs
+        # execute inside Deployment.measure but never enter its latency
+        # samples, so latency_p50/p99_s are steady-state-only by
+        # construction rather than by a hand-rolled loop out here.
+        with trc.span("verify.protocol.measure", n_runs=proto.n_runs,
+                      warmup=proto.warmup):
             meas = dep.measure(args, model=model, model_flops=model_flops,
-                               n_runs=proto.n_runs, hw=hw)
+                               n_runs=proto.n_runs, warmup=proto.warmup,
+                               hw=hw)
     rep = ProtocolReport(
         target=meas.target, platform=meas.platform, warmup=proto.warmup,
         n_runs=meas.n_runs, latency_s=meas.latency_s, energy_j=meas.energy_j,

@@ -182,12 +182,12 @@ class _FakeGuard:
 
 
 def test_pool_round_robin_and_statuses():
-    from repro.runtime.server import DeploymentPool
+    from repro.serving import DeploymentPool
 
     a, b = _FakeGuard(), _FakeGuard(degraded=True)
     pool = DeploymentPool([a, b], max_queue=16)
     rids = [pool.submit(i) for i in range(6)]
-    st = pool.run_until_drained()
+    st = pool.drain()
     assert st.served_ok == 3 and st.served_degraded == 3 and st.shed == 0
     assert a.served == 3 and b.served == 3        # round-robin split
     assert pool.result(rids[0])["value"] == 0
@@ -196,7 +196,7 @@ def test_pool_round_robin_and_statuses():
 
 
 def test_pool_sheds_at_submit_when_queue_full():
-    from repro.runtime.server import DeploymentPool
+    from repro.serving import DeploymentPool
 
     pool = DeploymentPool([_FakeGuard()], max_queue=2)
     rids = [pool.submit(i) for i in range(5)]
@@ -204,41 +204,58 @@ def test_pool_sheds_at_submit_when_queue_full():
             and pool.result(r)["status"] == "shed"]
     assert len(shed) == 3                          # bounded backpressure
     assert all(pool.result(r)["reason"] == "queue_full" for r in shed)
-    st = pool.run_until_drained()
+    st = pool.drain()
     assert st.submitted == 5 and st.shed == 3 and st.served_ok == 2
     assert pool.metrics.counter("server.pool.shed").value == 3
 
 
 def test_pool_quarantined_member_takes_no_traffic():
-    from repro.runtime.server import DeploymentPool
+    from repro.serving import DeploymentPool
 
     sick, well = _FakeGuard(healthy=False), _FakeGuard()
     pool = DeploymentPool([sick, well], max_queue=16)
     for i in range(4):
         pool.submit(i)
-    st = pool.run_until_drained()
+    st = pool.drain()
     assert sick.served == 0 and well.served == 4   # health-aware admission
     assert st.served_ok == 4 and st.lost == 0
 
 
 def test_pool_age_sheds_when_nothing_serves():
-    from repro.runtime.server import DeploymentPool
+    from repro.serving import DeploymentPool
 
     pool = DeploymentPool([_FakeGuard(healthy=False)], max_queue=16,
                           max_wait_ticks=2)
     for i in range(3):
         pool.submit(i)
-    st = pool.run_until_drained(max_ticks=50)
+    st = pool.drain(max_ticks=50)
     assert st.shed == 3 and st.served_ok == 0      # sustained-open -> shed
     assert all(r["reason"] == "max_wait_ticks"
                for r in pool.results.values())
 
 
 def test_pool_member_exception_is_lost_not_fatal():
-    from repro.runtime.server import DeploymentPool
+    from repro.serving import DeploymentPool
 
     pool = DeploymentPool([_FakeGuard(explode=True)], max_queue=4)
     pool.submit(1)
-    st = pool.run_until_drained()
+    st = pool.drain()
     assert st.lost == 1
     assert list(pool.results.values())[0]["error"] == "RuntimeError"
+
+
+def test_pool_old_import_site_is_a_warning_shim():
+    """The pre-PR-9 spellings keep working but deprecate loudly: the
+    runtime.server constructor and run_until_drained() both warn, forward
+    to repro.serving, and return identical results/stats."""
+    from repro.runtime.server import DeploymentPool as OldPool
+    from repro.serving import DeploymentPool as NewPool, PoolStats
+
+    with pytest.warns(DeprecationWarning, match="repro.serving"):
+        pool = OldPool([_FakeGuard()], max_queue=4)
+    assert isinstance(pool, NewPool)               # one implementation
+    rid = pool.submit(21)
+    with pytest.warns(DeprecationWarning, match="drain"):
+        st = pool.run_until_drained()
+    assert isinstance(st, PoolStats)
+    assert st.served_ok == 1 and pool.result(rid)["value"] == 42
