@@ -10,6 +10,13 @@ elastic-lstm design and times
 * ``per_step`` — the pre-fusion schedule (one interpreted MAC ``pallas_call``
   per timestep from an un-jitted Python walk), the PR-1 baseline.
 
+The ``multi_design`` section times the DSE turnaround (DESIGN.md §15): K
+isomorphic weight-perturbed candidates emulated end-to-end — construct +
+trace + compile + run, the cost a design-space search actually pays per
+candidate set — sequentially (one fresh emulator per design, the pre-PR-10
+world) vs batched (one vmapped program over the stacked design axis), with
+a bit-exactness cross-check against the sequential ``fused`` outputs.
+
 Writes ``BENCH_rtl_emulator.json`` (the perf trajectory artifact; CI uploads
 it on every push).
 """
@@ -94,17 +101,82 @@ def run(batches=DEFAULT_BATCHES, *, n_fused: int = 20, n_per_step: int = 3,
     return result
 
 
+def run_multi(k: int = 32, *, batch: int = 8,
+              archs=("elastic-lstm", "elastic-conv1d")) -> list:
+    """The multi-design turnaround benchmark: K isomorphic candidates,
+    sequential fresh-emulator evaluation vs one vmapped dispatch."""
+    import jax
+    import numpy as np
+
+    from repro.rtl import MultiDesignEmulator, RTLEmulator
+    from repro.verify.vectors import canonical_graph
+
+    rows = []
+    for arch in archs:
+        graphs = [canonical_graph(arch, seed=s)[0] for s in range(k)]
+        in_shape = graphs[0].edges[graphs[0].inputs[0]].shape
+        x = np.random.default_rng(0).integers(
+            -8, 8, (batch,) + in_shape).astype(np.int32)
+
+        # sequential per-design: the pre-sharing world — every candidate
+        # pays its own staging + trace + compile (mode "fused", the
+        # production default), which is what bounded DSE turnaround
+        t0 = time.perf_counter()
+        seq_outs = []
+        for g in graphs:
+            em = RTLEmulator(g, mode="fused")
+            seq_outs.append(np.asarray(
+                jax.block_until_ready(em.run_int(x).outputs), np.int64))
+        seq_s = time.perf_counter() - t0
+        seq_outs = np.stack(seq_outs)
+
+        # batched: stage all K, trace + compile ONE vmapped program, run
+        t0 = time.perf_counter()
+        multi = MultiDesignEmulator(graphs)
+        out = np.asarray(jax.block_until_ready(
+            multi.run_int(x).outputs), np.int64)
+        vmap_s = time.perf_counter() - t0
+        warm_us = _timeit(
+            lambda: jax.block_until_ready(multi.run_int(x).outputs), 10)
+
+        row = {
+            "arch": arch, "k": k, "batch": batch,
+            "sequential_s": round(seq_s, 3),
+            "vmapped_s": round(vmap_s, 3),
+            "speedup": round(seq_s / vmap_s, 2),
+            "vmapped_warm_us": round(warm_us, 1),
+            "vmapped_traces": multi.trace_count,
+            "bit_exact_vs_sequential_fused":
+                bool(np.array_equal(out, seq_outs)),
+        }
+        rows.append(row)
+        print(f"multi_design {arch}: k={k} sequential {seq_s:.2f}s  "
+              f"vmapped {vmap_s:.2f}s  x{row['speedup']:.1f}  "
+              f"warm {warm_us:.0f} us/dispatch  "
+              f"bit_exact={row['bit_exact_vs_sequential_fused']}")
+    return rows
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--batch", type=int, nargs="+", default=None,
                    help="batch sizes to sweep (default: 1 32 256)")
     p.add_argument("--n", type=int, default=20,
                    help="timed iterations for the fused path")
+    p.add_argument("--multi-k", type=int, default=32,
+                   help="candidate count for the multi_design section "
+                        "(0 to skip)")
     p.add_argument("--out", default="BENCH_rtl_emulator.json",
                    help="output JSON path ('' to skip writing)")
     a = p.parse_args()
-    run(tuple(a.batch) if a.batch else DEFAULT_BATCHES,
-        n_fused=a.n, out=a.out)
+    result = run(tuple(a.batch) if a.batch else DEFAULT_BATCHES,
+                 n_fused=a.n, out="")
+    if a.multi_k:
+        result["multi_design"] = run_multi(a.multi_k)
+    if a.out:
+        with open(a.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {a.out}")
 
 
 if __name__ == "__main__":

@@ -6,21 +6,48 @@ roofline instead of a 20-DSP FPGA.
 
     PYTHONPATH=src python experiments/hillclimb.py --cell yi-9b:train_4k \
         --variant gqa
+
+``--rtl-sweep K`` instead runs the batched design-space feasibility loop
+(ROADMAP item 1) over K isomorphic candidate accelerators: perturb the
+trained weights, pre-filter with the static analyzer, and conformance-
+check the whole candidate set through ONE vmapped emulator dispatch
+(:class:`repro.rtl.multi.MultiDesignEmulator`):
+
+    PYTHONPATH=src python experiments/hillclimb.py --rtl-sweep 8 \
+        --arch elastic-lstm
 """
-import os
-os.environ["XLA_FLAGS"] = (
-    os.environ.get("XLA_FLAGS", "")
-    + " --xla_force_host_platform_device_count=512"
-    + " --xla_cpu_enable_concurrency_optimized_scheduler=false")
 import argparse
-import dataclasses
 import json
+import os
 import pathlib
 import sys
+import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core.types import ParallelismConfig
+
+# roofline variants force many host devices; applied only from this
+# script's own entry point (never at import — importing an experiment must
+# not mutate the parent process environment), and each flag is appended at
+# most once even across repeated calls in one process.
+_XLA_DSE_FLAGS = (
+    "--xla_force_host_platform_device_count=512",
+    "--xla_cpu_enable_concurrency_optimized_scheduler=false",
+)
+
+
+def apply_xla_flags(env=None):
+    """Idempotently add the sweep's XLA flags to ``env`` (default: this
+    process's environment). A flag whose name is already present — any
+    value, e.g. a user-chosen device count — is left alone."""
+    env = os.environ if env is None else env
+    current = env.get("XLA_FLAGS", "")
+    missing = [f for f in _XLA_DSE_FLAGS
+               if f.split("=", 1)[0] not in current]
+    if missing:
+        env["XLA_FLAGS"] = " ".join(([current] if current else []) + missing)
+    return env.get("XLA_FLAGS", "")
 
 # ---------------------------------------------------------------------------
 # Flash-template analytic model (used by *flash variants): the Pallas
@@ -122,12 +149,107 @@ def run_variant(arch, shape_name, vname, json_dir="experiments/hillclimb"):
     return rep
 
 
+# ---------------------------------------------------------------------------
+# Batched RTL design-space sweep (ROADMAP item 1, riding on item 3):
+# K isomorphic weight-perturbed candidates, static-analyzer feasibility
+# pre-filter, then ONE vmapped conformance dispatch for the whole set.
+# ---------------------------------------------------------------------------
+
+
+def perturb_params(params, seed, scale=0.02):
+    """One DSE candidate: the trained pytree plus seeded gaussian noise —
+    same shapes everywhere, so the lowered graph stays program-isomorphic
+    to the base design."""
+    import jax
+    import numpy as np
+
+    rng = np.random.Generator(np.random.PCG64(seed))
+    return jax.tree.map(
+        lambda a: (np.asarray(a, np.float32)
+                   + rng.normal(0.0, scale, np.shape(a))
+                   .astype(np.float32)),
+        params)
+
+
+def rtl_sweep(arch="elastic-lstm", k=8, *, seed=0, scale=0.02,
+              json_dir="experiments/hillclimb"):
+    """The batched candidate-evaluation loop of the DSE engine.
+
+    1. lower K weight-perturbed candidates of ``arch`` (isomorphic by
+       construction — same config, same Q-formats);
+    2. feasibility pre-filter: the ~ms static analyzer (DESIGN.md §13)
+       drops candidates whose actual weights break the overflow/format
+       contract;
+    3. one batched differential conformance run over the survivors
+       (:func:`repro.verify.conformance.run_conformance_batch`): the
+       vmapped jnp path for all K at once, cross-checked per design.
+
+    Candidates share the cycle/resource model (cost is structural), so
+    the sweep's verdict is feasibility × conformance; writes a JSON
+    summary next to the roofline reports and returns it.
+    """
+    from repro.configs import get_config
+    from repro.rtl.analyze import analyze_graph
+    from repro.rtl.ir import lower_model
+    from repro.verify.conformance import run_conformance_batch
+    from repro.verify.vectors import canonical_params, _schema_for
+
+    cfg = get_config(arch)
+    base = canonical_params(_schema_for(cfg), seed=seed)
+    t0 = time.perf_counter()
+    graphs, feasible, diags = [], [], {}
+    for i in range(k):
+        g = lower_model(cfg, perturb_params(base, seed + 1000 + i,
+                                            scale=scale))
+        g.name = f"{arch}#c{i}"
+        graphs.append(g)
+        analysis = analyze_graph(g)
+        if analysis.passed:
+            feasible.append(i)
+        else:
+            diags[i] = [d.code for d in analysis.errors]
+    t_filter = time.perf_counter() - t0
+
+    survivors = [graphs[i] for i in feasible]
+    reports = run_conformance_batch(survivors) if survivors else []
+    t_total = time.perf_counter() - t0
+    conformant = [i for i, rep in zip(feasible, reports) if rep.passed]
+
+    out = {
+        "arch": arch, "k": k, "seed": seed, "scale": scale,
+        "feasible": feasible, "conformant": conformant,
+        "analyzer_diags": {str(i): c for i, c in diags.items()},
+        "n_vectors": reports[0].n_vectors if reports else 0,
+        "oracle_max_lsb": max((r.oracle_max_lsb for r in reports),
+                              default=0.0),
+        "filter_s": round(t_filter, 4),
+        "total_s": round(t_total, 4),
+    }
+    p = pathlib.Path(json_dir)
+    p.mkdir(parents=True, exist_ok=True)
+    (p / f"{arch}__rtl_sweep_k{k}.json").write_text(
+        json.dumps(out, indent=2))
+    print(f"[rtl-sweep] {arch}: {k} candidates -> {len(feasible)} feasible "
+          f"-> {len(conformant)} conformant in {t_total:.2f}s "
+          f"(filter {t_filter:.2f}s)")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True, help="arch:shape")
-    ap.add_argument("--variant", required=True,
-                    help=",".join(VARIANTS))
+    ap.add_argument("--cell", help="arch:shape (roofline variant sweep)")
+    ap.add_argument("--variant", help=",".join(VARIANTS))
+    ap.add_argument("--rtl-sweep", type=int, metavar="K",
+                    help="batched RTL DSE sweep over K candidates")
+    ap.add_argument("--arch", default="elastic-lstm",
+                    help="RTL arch for --rtl-sweep")
     args = ap.parse_args()
-    arch, shape = args.cell.split(":")
-    for v in args.variant.split(","):
-        run_variant(arch, shape, v)
+    if args.rtl_sweep:
+        rtl_sweep(args.arch, args.rtl_sweep)
+    elif args.cell and args.variant:
+        apply_xla_flags()                # before jax touches its backends
+        arch, shape = args.cell.split(":")
+        for v in args.variant.split(","):
+            run_variant(arch, shape, v)
+    else:
+        ap.error("pass either --cell/--variant or --rtl-sweep K")

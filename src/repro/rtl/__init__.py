@@ -27,9 +27,12 @@ from repro.rtl.emulator import (EmulationResult, RTLEmulator,  # noqa: F401
                                 assert_bit_exact, reference_apply)
 from repro.rtl.ir import (ActApplyNode, ActLUTNode, Conv1dNode,  # noqa: F401
                           ElementwiseNode, Edge, Graph, LinearNode,
-                          LSTMCellNode, lower_conv_model, lower_conv_stack,
-                          lower_linear_stack, lower_lstm_model, lower_model,
-                          validate_formats)
+                          LSTMCellNode, iso_key, lower_conv_model,
+                          lower_conv_stack, lower_linear_stack,
+                          lower_lstm_model, lower_model, validate_formats)
+from repro.rtl.multi import (MultiDesignEmulator,  # noqa: F401
+                             assert_isomorphic, stack_params)
+from repro.rtl.program_cache import ProgramLRU  # noqa: F401
 from repro.rtl.oplib import (HWTemplate, get_template,  # noqa: F401
                              list_templates, lowerable_families,
                              register_template, unregister_template)

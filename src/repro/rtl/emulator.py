@@ -18,12 +18,20 @@ generated from the float reference) and by the round-half-even shift
 ``ir.validate_formats`` — the same envelope that keeps int32 from
 overflowing keeps the f32 oracle exact.
 
-Execution model (DESIGN.md §7): the emulator is a *staged executor*.
+Execution model (DESIGN.md §7, §15): the emulator is a *staged executor*.
 ``__init__`` hoists every weight/bias/LUT conversion to a device constant
 once (``HWTemplate.prepare``); the graph walk is traced into a single
-``jax.jit``-compiled program per ``(input shape, dtype)``, held in a small
-LRU — so repeated verification/measurement calls never retrace and never
-re-upload. Three execution paths share the bit-exactness contract:
+``jax.jit``-compiled program per ``(iso_key, mode, input shape, dtype)``,
+held in a small :class:`~repro.rtl.program_cache.ProgramLRU` — so repeated
+verification/measurement calls never retrace and never re-upload. The
+prepared *array* constants (weights, biases, ROM tables) are passed to the
+compiled program as traced arguments, not closed over, so designs with
+isomorphic graphs (:func:`repro.rtl.ir.iso_key` — same structure, shapes
+and Q-formats, different trained values) share one program: hand several
+emulators one shared ``ProgramLRU`` and only the first traces. Requant
+shifts and kernel specs stay jit-static (they select code paths), which is
+exactly why they are part of the isomorphism key. Three execution paths
+share the bit-exactness contract:
 
 * ``mode="fused"`` (default) — one :mod:`repro.kernels.lstm_cell_int`
   dispatch per cell per window (weights + both ROMs VMEM-resident);
@@ -38,9 +46,8 @@ context templates run against. Per-op math lives in :mod:`repro.rtl.oplib`.
 from __future__ import annotations
 
 import threading
-from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,10 +56,11 @@ import numpy as np
 from repro.kernels import use_interpret
 from repro.obs import get_metrics, get_tracer
 from repro.quant.fixedpoint import fxp_to_int
-from repro.rtl.ir import Graph
+from repro.rtl.ir import Graph, iso_key
 # mac primitives live in the op library now; re-exported for compatibility
 from repro.rtl.oplib import (_mac_int_jnp, get_template,  # noqa: F401
                              mac_int, mac_int_pallas)
+from repro.rtl.program_cache import ProgramLRU
 
 # --------------------------------------------------------------------------- #
 # Integer emulator
@@ -66,6 +74,38 @@ class EmulationResult:
     trace: Dict[str, jax.Array]      # per-edge int codes
 
 
+class _ExecCtx:
+    """The execution context a *traced* graph walk hands the templates.
+
+    Templates run against three attributes of their executor —
+    ``prepared(name)``, ``lookup(lut, codes)`` and ``interpret`` — so a
+    traced walk can substitute this lightweight view in which the array
+    constants are the walk's traced ``params`` argument (per-node dicts of
+    int32 operands) while jit-static values (kernel specs) come from the
+    owning emulator's prepared store. Isomorphic designs have identical
+    statics by construction (specs/shifts derive from shapes and formats,
+    which the iso key pins), so a program traced through one emulator's
+    context replays correctly for any emulator with the same key.
+    """
+
+    __slots__ = ("_params", "_static", "_lut_lo", "interpret")
+
+    def __init__(self, em: "RTLEmulator", params: Dict[str, Dict]):
+        self._params = params
+        self._static = em._static
+        self._lut_lo = {name: n.lo for name, n in em._lut_nodes.items()}
+        self.interpret = em.interpret
+
+    def prepared(self, name: str) -> Dict:
+        merged = dict(self._static.get(name, ()))
+        merged.update(self._params.get(name, ()))
+        return merged
+
+    def lookup(self, lut_name: str, codes: jax.Array) -> jax.Array:
+        return jnp.take(self._params[lut_name]["table"],
+                        codes - self._lut_lo[lut_name])
+
+
 class RTLEmulator:
     """Runs the emitted design on integer inputs, batch-vectorized.
 
@@ -77,7 +117,8 @@ class RTLEmulator:
     MODES = ("fused", "pallas", "jnp")
 
     def __init__(self, graph: Graph, use_pallas: bool = True,
-                 mode: str = None, max_programs: int = 8):
+                 mode: str = None, max_programs: int = 8,
+                 programs: Optional[ProgramLRU] = None):
         self.graph = graph
         self.use_pallas = use_pallas
         self.mode = mode if mode is not None else \
@@ -88,20 +129,35 @@ class RTLEmulator:
         if max_programs < 1:
             raise ValueError(f"max_programs must be >= 1, got {max_programs}")
         self.interpret = use_interpret()
+        self.iso_key = iso_key(graph)
         # ---- stage 0: hoist every host->device conversion, once ----------
         # each template declares its constants (weights, biases, ROM tables,
-        # jit-static specs); ndarray values become device int32 residents.
+        # jit-static specs); ndarray values become device int32 residents
+        # (the traced operands of the compiled walk), non-arrays stay
+        # jit-static.
         self._lut_nodes = graph.act_luts()
         self._prep: Dict[str, Dict] = {}
+        self._param_keys: Dict[str, tuple] = {}   # node -> its array fields
+        self._static: Dict[str, Dict] = {}        # node -> jit-static fields
         for n in graph.nodes:
             raw = get_template(n.op).prepare(n, graph)
             self._prep[n.name] = {
                 k: (jnp.asarray(v, jnp.int32)
                     if isinstance(v, np.ndarray) else v)
                 for k, v in raw.items()}
-        # ---- compiled-program cache: (shape, dtype) -> jitted graph walk -
-        self._programs: "OrderedDict" = OrderedDict()
-        self._max_programs = max_programs
+            self._param_keys[n.name] = tuple(
+                sorted(k for k, v in raw.items()
+                       if isinstance(v, np.ndarray)))
+            self._static[n.name] = {
+                k: v for k, v in raw.items()
+                if not isinstance(v, np.ndarray)}
+        # ---- compiled-program cache ---------------------------------------
+        # (iso_key, mode, interpret, shape, dtype) -> jitted graph walk.
+        # Per-instance by default; pass a shared ProgramLRU to let
+        # isomorphic emulators reuse each other's programs (DESIGN.md §15).
+        self._programs = programs if programs is not None \
+            else ProgramLRU(max_programs)
+        self._max_programs = self._programs.max_programs
         self.trace_count = 0             # how many times the walk was traced
         # observability (DESIGN.md §11): cache behavior + dispatch counts
         # are plain int attrs (always on, ~free) mirrored into the process
@@ -113,8 +169,8 @@ class RTLEmulator:
         self.dispatch_counts: Dict[str, int] = {}
         self.seu_flips = 0               # injected bit-flips (resilience)
         # pooled serving calls run_many from worker threads; the program
-        # LRU pop/insert/evict and the dispatch-count dict are the only
-        # shared mutable state on that path — one lock covers both.
+        # cache locks itself (ProgramLRU); this lock covers the remaining
+        # shared mutable state — dispatch counts and the prepared memories.
         self._lock = threading.Lock()
 
     # -- execution context handed to the templates ---------------------------
@@ -127,53 +183,74 @@ class RTLEmulator:
         return jnp.take(self._prep[lut_name]["table"],
                         codes - self._lut_nodes[lut_name].lo)
 
+    def params(self) -> Dict[str, Dict[str, jax.Array]]:
+        """The traced-operand pytree: per-node dicts of the prepared array
+        constants (weights, biases, ROM tables), keyed by node name. This
+        is what every compiled program takes as its second argument — and
+        what :class:`~repro.rtl.multi.MultiDesignEmulator` stacks across
+        isomorphic candidates."""
+        with self._lock:
+            return {name: {k: self._prep[name][k] for k in keys}
+                    for name, keys in self._param_keys.items() if keys}
+
     # -- graph walk (traced once per shape, then replayed) -------------------
-    def _execute(self, x_int: jax.Array, *, mode: str) -> Dict[str, jax.Array]:
+    def _execute(self, x_int: jax.Array, *, mode: str,
+                 params: Optional[Dict[str, Dict]] = None
+                 ) -> Dict[str, jax.Array]:
         g = self.graph
+        em = self if params is None else _ExecCtx(self, params)
         env: Dict[str, jax.Array] = {g.inputs[0]: x_int}
         for n in g.nodes:
-            get_template(n.op).execute(n, env, self, mode)
+            get_template(n.op).execute(n, env, em, mode)
         return env
+
+    def _cache_key(self, shape, dtype):
+        # keyed on everything the traced program depends on besides the
+        # array arguments: the design's isomorphism class, execution mode,
+        # pallas interpret flag, and the input aval
+        return (self.iso_key, self.mode, self.interpret,
+                tuple(int(d) for d in shape), jnp.dtype(dtype).name)
 
     def _program(self, shape, dtype):
         """The compiled graph walk for one (shape, dtype), LRU-cached.
 
         Returns ``(program, cache_hit)`` and keeps the cache observable:
         ``cache_hits``/``cache_misses``/``cache_evictions`` on the instance
-        plus the matching ``rtl.emulator.cache_*`` process counters.
+        plus the matching ``rtl.emulator.cache_*`` process counters. The
+        program signature is ``prog(x_int, params)`` — array constants are
+        traced arguments, so any emulator whose graph shares this
+        emulator's iso key can replay the program with its own params.
         """
-        key = (tuple(shape), jnp.dtype(dtype).name)
         mx = get_metrics()
-        with self._lock:
-            prog = self._programs.pop(key, None)
-            hit = prog is not None
-            if prog is None:
-                self.cache_misses += 1
-                mx.counter("rtl.emulator.cache_miss").inc()
 
-                def walk(x_int):
-                    self.trace_count += 1    # python side effect: trace-time
-                    return self._execute(x_int, mode=self.mode)
+        def build():
+            def walk(x_int, params):
+                self.trace_count += 1    # python side effect: trace-time
+                return self._execute(x_int, mode=self.mode, params=params)
 
-                prog = jax.jit(walk)
-                while len(self._programs) >= self._max_programs:
-                    self._programs.popitem(last=False)
-                    self.cache_evictions += 1
-                    mx.counter("rtl.emulator.cache_evict").inc()
-            else:
-                self.cache_hits += 1
-                mx.counter("rtl.emulator.cache_hit").inc()
-            self._programs[key] = prog       # (re)insert most-recently-used
+            return jax.jit(walk)
+
+        prog, hit, evicted = self._programs.get_or_build(
+            self._cache_key(shape, dtype), build)
+        if hit:
+            self.cache_hits += 1
+            mx.counter("rtl.emulator.cache_hit").inc()
+        else:
+            self.cache_misses += 1
+            mx.counter("rtl.emulator.cache_miss").inc()
+            if evicted:
+                self.cache_evictions += evicted
+                mx.counter("rtl.emulator.cache_evict").inc(evicted)
         return prog, hit
 
     def has_program(self, shape, dtype) -> bool:
         """Whether the LRU already holds a compiled program for this
-        ``(shape, dtype)`` key — the serving router's affinity probe
+        input — the serving router's affinity probe
         (:mod:`repro.serving.router`). Read-only: does not touch LRU
-        order, so probing every pool member is side-effect free."""
-        key = (tuple(int(d) for d in shape), jnp.dtype(dtype).name)
-        with self._lock:
-            return key in self._programs
+        order, so probing every pool member is side-effect free. Keys
+        include the design's iso key, so with a shared ProgramLRU a
+        replica counts as warm for any isomorphic sibling's program."""
+        return self._cache_key(shape, dtype) in self._programs
 
     def cache_stats(self) -> Dict[str, int]:
         """Program-cache behavior + per-mode dispatch counts, one dict."""
@@ -201,12 +278,15 @@ class RTLEmulator:
         """Flip ``bit`` of flat ``word`` in memory ``node.key``; returns the
         corrupted word's new int32 value.
 
-        The compiled programs close over the prepared constants at trace
-        time, so — exactly like reflashing a BRAM under a running design —
-        the mutation only takes effect by invalidating every compiled
-        program (the next dispatch re-traces against the corrupted memory).
-        Silent by construction: no error is raised, subsequent outputs are
-        simply wrong, and only a golden-vector canary can tell.
+        The corrupted array flows into the very next dispatch (prepared
+        memories are traced arguments of the compiled programs), but the
+        compiled programs are still invalidated — the reflash semantics:
+        a bitstream rewrite under a running design drops its loaded
+        configuration, and with a shared ProgramLRU this also keeps any
+        isomorphic sibling from replaying a program whose trace predates
+        the fault plan. Silent by construction: no error is raised,
+        subsequent outputs are simply wrong, and only a golden-vector
+        canary can tell.
         """
         if not 0 <= bit <= 31:
             raise ValueError(f"bit must be in [0, 31], got {bit}")
@@ -243,15 +323,16 @@ class RTLEmulator:
     def run_int(self, x_int: jax.Array) -> EmulationResult:
         x_int = jnp.asarray(x_int)
         prog = self._program(x_int.shape, x_int.dtype)
+        params = self.params()
         self._count_dispatch(self.mode)
         trc = get_tracer()
         if trc.enabled:                      # hoisted guard: skip the attrs
             with trc.span("rtl.emulator.dispatch", mode=self.mode,
                           shape=str(tuple(x_int.shape)), cached=prog[1],
                           design=self.graph.name):
-                env = prog[0](x_int)
+                env = prog[0](x_int, params)
         else:
-            env = prog[0](x_int)
+            env = prog[0](x_int, params)
         return self._result(env)
 
     def run(self, x: jax.Array) -> EmulationResult:

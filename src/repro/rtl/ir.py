@@ -320,11 +320,60 @@ class Graph:
     def total_macs(self) -> int:
         return sum(n.macs() for n in self.nodes)
 
+    def iso_key(self) -> str:
+        """Program-isomorphism digest (see module-level :func:`iso_key`)."""
+        return iso_key(self)
+
     def add(self, node: Node, *edges: Edge) -> Node:
         self.nodes.append(node)
         for e in edges:
             self.edges[e.name] = e
         return node
+
+
+def iso_key(graph: Graph) -> str:
+    """Program-isomorphism key: a stable digest of everything the staged
+    executor's traced program depends on *except* the values inside the
+    weight/bias arrays.
+
+    Two graphs share a key iff the emulator would trace the identical
+    program for them: same topology (node names, kinds, wiring), same
+    edge shapes and Q-formats, and same template scalars — sequence
+    lengths, kernel/stride, LUT kinds/depths/offsets, and every
+    ``FxpFormat`` (formats determine the requant *shifts*, which stay
+    jit-static; see DESIGN.md §15).  Array-valued fields contribute only
+    their shape: perturbing trained weights never changes the key, which
+    is what lets K design-space candidates share one compiled program
+    (weights ride along as traced arguments).
+
+    The digest is order-sensitive over ``graph.nodes`` — execution order
+    is part of the program — and includes node names because the traced
+    parameter pytree is keyed by them.
+    """
+    import hashlib
+    from dataclasses import fields as dc_fields
+
+    parts: List = []
+    for n in graph.nodes:
+        rec: List = [type(n).__name__, n.name, n.op,
+                     tuple(n.inputs), tuple(n.outputs)]
+        for f in dc_fields(n):
+            if f.name in ("name", "op", "inputs", "outputs"):
+                continue
+            v = getattr(n, f.name)
+            if isinstance(v, np.ndarray):
+                rec.append((f.name, "array", tuple(v.shape)))
+            elif isinstance(v, FxpFormat):
+                rec.append((f.name, "fmt", v.total_bits, v.frac_bits))
+            else:                        # ints, strs (LUT refs, kinds), ...
+                rec.append((f.name, v))
+        parts.append(tuple(rec))
+    for name in sorted(graph.edges):
+        e = graph.edges[name]
+        parts.append((name, tuple(e.shape),
+                      e.fmt.total_bits, e.fmt.frac_bits))
+    parts.append(("io", tuple(graph.inputs), tuple(graph.outputs)))
+    return hashlib.sha256(repr(parts).encode()).hexdigest()[:16]
 
 
 def validate_formats(*, act: FxpFormat, weight: FxpFormat, state: FxpFormat,

@@ -1,0 +1,89 @@
+"""One locked LRU of compiled programs, shared by every staged executor.
+
+Both the RTL emulator (:mod:`repro.rtl.emulator`) and the serving shard
+layer (:mod:`repro.serving.shard`) cache jitted programs keyed by what the
+program was traced for — and both are hit from farm worker threads.  PR 7
+put a lock around the emulator's ``OrderedDict``; ``shard.py`` had quietly
+re-implemented the same pop/insert/evict dance without one, so concurrent
+dispatch could corrupt that cache.  This module is the single
+implementation both now use.
+
+The LRU is also the unit of *program sharing*: isomorphic designs (same
+:func:`repro.rtl.ir.iso_key`) produce identical traced programs once
+weights are passed as arguments, so handing several emulators one shared
+``ProgramLRU`` makes K candidate designs compile exactly once per
+``(iso_key, mode, shape)`` — the multi-design emulation contract
+(DESIGN.md §15).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable, Tuple
+
+
+class ProgramLRU:
+    """Thread-safe least-recently-used cache of compiled programs.
+
+    ``get_or_build(key, factory)`` returns ``(program, hit, n_evicted)``:
+    on a miss the factory runs *under the lock* (jit construction is cheap
+    — tracing happens on first call — and holding the lock keeps two
+    threads from building the same key twice), the entry is inserted
+    most-recently-used, and the oldest entries are evicted down to
+    ``max_programs``.  Hits refresh recency.  ``key in lru`` is a
+    read-only probe that does not touch recency order, so affinity
+    routers can probe every pool member side-effect free.
+    """
+
+    def __init__(self, max_programs: int = 8):
+        if max_programs < 1:
+            raise ValueError(f"max_programs must be >= 1, got {max_programs}")
+        self.max_programs = max_programs
+        self._programs: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get_or_build(self, key: Hashable, factory: Callable[[], Any]
+                     ) -> Tuple[Any, bool, int]:
+        with self._lock:
+            prog = self._programs.pop(key, None)
+            hit = prog is not None
+            evicted = 0
+            if prog is None:
+                self.misses += 1
+                prog = factory()
+                while len(self._programs) >= self.max_programs:
+                    self._programs.popitem(last=False)
+                    evicted += 1
+                self.evictions += evicted
+            else:
+                self.hits += 1
+            self._programs[key] = prog   # (re)insert most-recently-used
+        return prog, hit, evicted
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._programs
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._programs)
+
+    def clear(self) -> None:
+        """Drop every cached program (e.g. after an SEU corrupts the
+        memories a program's arguments are built from)."""
+        with self._lock:
+            self._programs.clear()
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "size": len(self._programs)}
+
+    def __repr__(self) -> str:
+        return (f"ProgramLRU(max_programs={self.max_programs}, "
+                f"size={len(self)}, hits={self.hits}, "
+                f"misses={self.misses}, evictions={self.evictions})")

@@ -60,13 +60,25 @@ def pad_window(x: np.ndarray, length: int) -> np.ndarray:
 
 def padded_batch_size(n: int, max_batch: int) -> int:
     """Next power of two >= n, capped at ``max_batch`` (programs compile
-    per total batch size, so quantizing B bounds the program-cache set)."""
+    per total batch size, so quantizing B bounds the program-cache set).
+
+    ``max_batch`` is a hard cap: exactly ``max_batch`` real rows must not
+    round up past it (B=64 at cap 64 stays 64), and more rows than the
+    cap is a caller error — :func:`pack` splits oversized groups into
+    multiple batches *before* sizing each one.
+    """
     if n < 1:
         raise ValueError(f"batch must be >= 1, got {n}")
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    if n > max_batch:
+        raise ValueError(
+            f"batch of {n} rows exceeds max_batch={max_batch}; split the "
+            "group into multiple dispatches first (pack does)")
     b = 1
     while b < n:
         b *= 2
-    return min(b, max(max_batch, n))
+    return min(b, max_batch)
 
 
 @dataclass
@@ -86,33 +98,49 @@ class MicroBatch:
 
 
 def pack(design: str, bucket_len: int, requests: List[ServeRequest], *,
-         pad_batch: bool = True, max_batch: int = 64) -> MicroBatch:
+         pad_batch: bool = True, max_batch: int = 64) -> List[MicroBatch]:
     """Pad each request's window to ``bucket_len``, stack along batch, and
-    (optionally) pad the batch dimension to a power of two."""
+    (optionally) pad the batch dimension to a power of two.
+
+    Returns a *list* of batches: a group larger than ``max_batch`` splits
+    into ``ceil(n / max_batch)`` dispatches (each at most ``max_batch``
+    rows) instead of raising or silently dispatching an over-cap shape
+    the program cache was never sized for.
+    """
     if not requests:
         raise ValueError("cannot pack an empty batch")
-    rows = [pad_window(np.asarray(r.window, np.float32), bucket_len)
-            for r in requests]
-    arr = np.stack(rows, axis=0)
-    if pad_batch:
-        b = padded_batch_size(len(rows), max_batch)
-        if b > len(rows):
-            filler = np.zeros((b - len(rows),) + arr.shape[1:], arr.dtype)
-            arr = np.concatenate([arr, filler], axis=0)
-    return MicroBatch(design=design, bucket_len=bucket_len,
-                      requests=list(requests), array=arr)
+    batches: List[MicroBatch] = []
+    for i in range(0, len(requests), max_batch):
+        chunk = list(requests[i:i + max_batch])
+        rows = [pad_window(np.asarray(r.window, np.float32), bucket_len)
+                for r in chunk]
+        arr = np.stack(rows, axis=0)
+        if pad_batch:
+            b = padded_batch_size(len(rows), max_batch)
+            if b > len(rows):
+                filler = np.zeros((b - len(rows),) + arr.shape[1:],
+                                  arr.dtype)
+                arr = np.concatenate([arr, filler], axis=0)
+        batches.append(MicroBatch(design=design, bucket_len=bucket_len,
+                                  requests=chunk, array=arr))
+    return batches
 
 
 def unpack(batch: MicroBatch, outputs) -> None:
     """De-chunk one dispatch: slice row ``i`` of ``outputs`` back onto
-    request ``i``. Filler rows are dropped. Marks nothing terminal — the
-    farm owns status transitions (it also stamps timing/provenance)."""
+    request ``i``. Filler rows are dropped, and rows whose request is
+    already terminal (e.g. expired at dispatch time) keep their verdict —
+    a missed deadline must not grow a result. Marks nothing terminal
+    itself — the farm owns status transitions (it also stamps
+    timing/provenance)."""
     out = np.asarray(outputs)
     if out.shape[0] < len(batch.requests):
         raise ValueError(
             f"dispatch returned {out.shape[0]} rows for "
             f"{len(batch.requests)} requests")
     for i, req in enumerate(batch.requests):
+        if req.terminal:
+            continue
         req.result = out[i]
 
 
@@ -165,15 +193,16 @@ class MicroBatcher:
         batches: List[MicroBatch] = []
         lingering: List[ServeRequest] = []
         for (design, ln), group in groups.items():
-            while len(group) >= self.max_batch:
-                head, group = group[:self.max_batch], group[self.max_batch:]
-                batches.append(pack(design, ln, head,
+            n_full = (len(group) // self.max_batch) * self.max_batch
+            if n_full:                   # full batches always flush
+                batches.extend(pack(design, ln, group[:n_full],
                                     pad_batch=self.pad_batch,
                                     max_batch=self.max_batch))
+                group = group[n_full:]
             if group:
                 waited = now - min(r.t_submit for r in group)
                 if flush or waited >= self.max_wait_s:
-                    batches.append(pack(design, ln, group,
+                    batches.extend(pack(design, ln, group,
                                         pad_batch=self.pad_batch,
                                         max_batch=self.max_batch))
                 else:

@@ -35,8 +35,8 @@ import numpy as np
 
 from repro.obs import MetricsRegistry, get_tracer
 from repro.serving.batcher import MicroBatch, MicroBatcher
-from repro.serving.queue import (DONE, FAILED, AdmissionQueue, ServeRequest,
-                                 SHED)
+from repro.serving.queue import (DONE, EXPIRED, FAILED, AdmissionQueue,
+                                 ServeRequest, SHED)
 from repro.serving.router import AffinityRouter, NoServeableMember
 
 
@@ -218,12 +218,34 @@ class AcceleratorFarm:
 
     def _dispatch(self, batch: MicroBatch) -> int:
         """Route one packed batch, execute, de-chunk; redispatch once on
-        member failure before marking the batch's requests failed."""
+        member failure before marking the batch's requests failed.
+
+        Deadlines are re-checked here: a request can expire *between*
+        ``queue.take()`` and dispatch (batch forming takes wall time, and
+        a lingering partial batch may carry old requests), which
+        ``queue.expire`` can no longer catch. Expired rows stay in the
+        packed array (row i ↔ request i alignment is the de-chunk
+        contract) but are marked terminal before the dispatch and never
+        receive a result; they count under the same
+        ``serving.queue.expired`` counter as queue-side expiry, keeping
+        the ``admitted == done + expired`` reconciliation exact.
+        """
         mx = self.metrics
         trc = get_tracer()
         arr = batch.array
         t_dispatch = self.clock()
-        for req in batch.requests:       # queued -> on the wire
+        live: List[ServeRequest] = []
+        for req in batch.requests:
+            if req.deadline_s is not None and t_dispatch >= req.deadline_s:
+                req.status = EXPIRED     # missed between take() and here
+                req.error = "deadline"
+                req.t_done = t_dispatch
+                mx.counter("serving.queue.expired").inc()
+            else:
+                live.append(req)
+        if not live:
+            return 0
+        for req in live:                 # queued -> on the wire
             mx.histogram("serving.queue_wait_s").observe(
                 t_dispatch - req.t_submit)
         tried: Tuple[int, ...] = ()
@@ -254,8 +276,11 @@ class AcceleratorFarm:
             mx.counter("serving.dispatches").inc()
             mx.counter("serving.windows_dispatched").inc(int(arr.shape[0]))
             mx.histogram("serving.batch_fill").observe(batch.fill)
-            mx.histogram("serving.batch_size").observe(len(batch.requests))
-            for req in batch.requests:
+            mx.histogram("serving.batch_size").observe(len(live))
+            from repro.serving.batcher import unpack
+
+            unpack(batch, out)           # skips terminal (expired) rows
+            for req in live:
                 req.status = DONE
                 req.t_done = now
                 req.member = idx
@@ -267,15 +292,14 @@ class AcceleratorFarm:
                 mx.histogram(
                     f"serving.latency_s.{batch.design}").observe(
                     now - req.t_submit)
-            from repro.serving.batcher import unpack
-
-            unpack(batch, out)
-            return len(batch.requests)
+            return len(live)
         return 0                         # unreachable; keeps mypy honest
 
     def _fail(self, batch: MicroBatch, error: str) -> int:
         now = self.clock()
         for req in batch.requests:
+            if req.terminal:             # e.g. expired at dispatch time
+                continue
             req.status = FAILED
             req.error = error
             req.t_done = now

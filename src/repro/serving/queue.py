@@ -106,14 +106,20 @@ class AdmissionQueue:
     # -- aging ---------------------------------------------------------- #
     def expire(self) -> List[ServeRequest]:
         """Shed every queued request whose deadline has passed; returns
-        the expired requests (already marked terminal)."""
+        the expired requests (already marked terminal).
+
+        The comparison is ``now >= deadline``: a deadline is the last
+        instant a *response* may land, so a request first inspected
+        exactly at its deadline cannot be served in time — dispatching it
+        would burn accelerator work on an already-missed SLO.
+        """
         now = self.clock()
         expired: List[ServeRequest] = []
         if not self._q:
             return expired
         keep: Deque[ServeRequest] = deque()
         for req in self._q:
-            if req.deadline_s is not None and now > req.deadline_s:
+            if req.deadline_s is not None and now >= req.deadline_s:
                 req.status = EXPIRED
                 req.error = "deadline"
                 expired.append(req)

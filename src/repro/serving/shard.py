@@ -18,7 +18,6 @@ integer graph walk on its batch slice.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
 from typing import Optional, Tuple
 
 import jax
@@ -27,6 +26,7 @@ import numpy as np
 
 from repro.launch.mesh import make_smoke_mesh
 from repro.quant.fixedpoint import fxp_to_int
+from repro.rtl.program_cache import ProgramLRU
 from repro.shardmap import shard_map
 
 
@@ -52,8 +52,10 @@ class ShardedExecutable:
         self.exe = exe
         self.mesh = mesh if mesh is not None else make_serving_mesh()
         self.n_shards = int(self.mesh.shape["batch"])
-        self._programs: "OrderedDict" = OrderedDict()
-        self._max_programs = max_programs
+        # the same locked LRU the emulator uses — farm worker threads hit
+        # this cache concurrently, and an unlocked pop/insert/evict dance
+        # can drop or duplicate entries under contention
+        self._programs = ProgramLRU(max_programs)
         self.trace_count = 0
 
     @property
@@ -78,9 +80,7 @@ class ShardedExecutable:
         return ((b + n - 1) // n) * n
 
     def _program(self, shape: Tuple[int, ...], dtype):
-        key = (tuple(shape), jnp.dtype(dtype).name)
-        prog = self._programs.pop(key, None)
-        if prog is None:
+        def build():
             emu = self.exe.emulator
             out_edge = emu.graph.outputs[0]
 
@@ -93,10 +93,10 @@ class ShardedExecutable:
             sharded = shard_map(walk, mesh=self.mesh,
                                 in_specs=P("batch"), out_specs=P("batch"),
                                 check_vma=False)
-            prog = jax.jit(sharded)
-            while len(self._programs) >= self._max_programs:
-                self._programs.popitem(last=False)
-        self._programs[key] = prog
+            return jax.jit(sharded)
+
+        prog, _hit, _evicted = self._programs.get_or_build(
+            (tuple(shape), jnp.dtype(dtype).name), build)
         return prog
 
     def __call__(self, x) -> jax.Array:

@@ -26,7 +26,8 @@ health probe ``repro.resilience`` guards run between requests.
 from repro.verify.conformance import (CanaryResult,  # noqa: F401
                                       ConformanceReport, canary_check,
                                       fuzz_template, graph_error_budget_lsb,
-                                      run_conformance, verify_deployment)
+                                      run_conformance, run_conformance_batch,
+                                      verify_deployment)
 from repro.verify.protocol import (TABLE1_GOP_PER_J,  # noqa: F401
                                    TABLE1_LATENCY_US, TABLE1_POWER_MW,
                                    MeasurementProtocol, ProtocolCheck,

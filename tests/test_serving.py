@@ -111,13 +111,23 @@ def test_bucket_and_pad_helpers():
         pad_window(_win(9), 8)
     assert [padded_batch_size(n, 64) for n in (1, 2, 3, 5, 33)] == \
         [1, 2, 4, 8, 64]
-    assert padded_batch_size(100, 64) == 100    # never truncates requests
+    with pytest.raises(ValueError, match="exceeds max_batch"):
+        padded_batch_size(100, 64)              # pack splits groups first
+
+
+def test_padded_batch_size_respects_the_cap_edge():
+    # regression: B == max_batch must not round up past the cap, and an
+    # over-cap B is a split-first error, never a silent over-cap dispatch
+    assert padded_batch_size(63, 64) == 64
+    assert padded_batch_size(64, 64) == 64
+    with pytest.raises(ValueError, match="exceeds max_batch"):
+        padded_batch_size(65, 64)
 
 
 def test_pack_pads_batch_and_unpack_slices_back():
     reqs = [ServeRequest(rid=i, design="d", window=_win(3 + i, seed=i))
             for i in range(3)]
-    batch = pack("d", 8, reqs, pad_batch=True, max_batch=64)
+    [batch] = pack("d", 8, reqs, pad_batch=True, max_batch=64)
     assert batch.array.shape == (4, 8, 2)       # 3 real rows -> pow2 = 4
     assert batch.fill == 3 / 4
     assert np.all(batch.array[3] == 0)          # filler row
@@ -127,6 +137,40 @@ def test_pack_pads_batch_and_unpack_slices_back():
     unpack(batch, out)
     for i, r in enumerate(reqs):
         assert np.array_equal(r.result, out[i])
+
+
+@pytest.mark.parametrize("n", [63, 64, 65])
+def test_pack_splits_at_the_max_batch_cap(n):
+    # regression (B = 63 / 64 / 65 around cap 64): exactly max_batch real
+    # rows never rounds up past the cap, and an overflowing group splits
+    # into multiple MicroBatches instead of raising
+    reqs = [ServeRequest(rid=i, design="d", window=_win(4, seed=i))
+            for i in range(n)]
+    batches = pack("d", 8, reqs, pad_batch=True, max_batch=64)
+    assert [len(b.requests) for b in batches] == \
+        ([63] if n == 63 else [64] if n == 64 else [64, 1])
+    assert all(b.array.shape[0] <= 64 for b in batches)
+    if n == 63:
+        assert batches[0].array.shape[0] == 64      # pow2 pad up to cap
+    if n == 64:
+        assert batches[0].array.shape[0] == 64      # cap stays the cap
+    if n == 65:
+        assert batches[1].array.shape[0] == 1       # tail re-quantized
+    # row i of each chunk still belongs to request i of that chunk
+    got = [r.rid for b in batches for r in b.requests]
+    assert got == list(range(n))
+
+
+def test_batcher_form_splits_oversized_groups():
+    # a single form() over > max_batch requests must produce only
+    # cap-respecting dispatches (the old path raised from pack)
+    mb = MicroBatcher(buckets={"d": (8,)}, max_batch=4, max_wait_s=0.0)
+    reqs = [ServeRequest(rid=i, design="d", window=_win(4), t_submit=0.0)
+            for i in range(9)]
+    batches, linger = mb.form(reqs, now=0.0, flush=True)
+    assert linger == []
+    assert [len(b.requests) for b in batches] == [4, 4, 1]
+    assert all(b.array.shape[0] <= 4 for b in batches)
 
 
 def test_batcher_flush_policy():
@@ -174,6 +218,69 @@ def test_queue_expires_on_deadline():
     assert expired == [hurried] and hurried.status == EXPIRED
     assert hurried.error == "deadline"
     assert q.peek() == [patient]                 # FIFO survivor intact
+
+
+def test_queue_expires_at_exactly_the_deadline():
+    # regression: a request inspected exactly AT its deadline can no
+    # longer be answered in time — `now >= deadline` sheds it (the old
+    # strict `>` dispatched it and then missed)
+    clock = VirtualClock()
+    q = AdmissionQueue(8, clock=clock, metrics=MetricsRegistry())
+    req = ServeRequest(rid=0, design="d", window=None, deadline_s=1.0)
+    q.offer(req)
+    clock.advance(1.0)                           # now == deadline exactly
+    assert q.expire() == [req]
+    assert req.status == EXPIRED and req.error == "deadline"
+    assert q.metrics.counter("serving.queue.expired").value == 1
+
+
+class _SteppingClock:
+    """A clock that advances ``step`` on every read — deterministically
+    opens the take()→dispatch window the farm must re-check. Starts past
+    zero so ``t_submit`` is never the 0.0 sentinel (which would make the
+    queue re-stamp it with an extra clock read)."""
+
+    def __init__(self, step=0.1, start=1.0):
+        self.t = start
+        self.step = step
+
+    def __call__(self):
+        t = self.t
+        self.t += self.step
+        return t
+
+
+def test_farm_recheck_deadline_at_dispatch_time():
+    # regression: a request can expire BETWEEN queue.take() and dispatch
+    # (batch forming takes wall time); the farm must re-check at dispatch,
+    # mark it expired under the same serving.queue.expired counter, and
+    # never attach a result to it — while batchmates still complete.
+    member = _Member()
+    farm, clock = _fake_farm([member], clock=_SteppingClock(step=0.1))
+    # clock reads: submit A -> 1.0, submit B -> 1.1, tick: expire -> 1.2
+    # (A still alive: 1.2 < 1.35), form -> 1.3, dispatch -> 1.4 >= 1.35
+    ra = farm.submit("fake", _win(4), deadline_s=1.35)
+    rb = farm.submit("fake", _win(4))
+    farm.tick(flush=True)
+    a, b = farm.result(ra), farm.result(rb)
+    assert a.status == EXPIRED and a.error == "deadline"
+    assert a.result is None                      # missed SLO grows no result
+    assert b.status == DONE and b.result is not None
+    s = farm.stats()
+    assert s.expired == 1 and s.done == 1 and s.failed == 0
+    assert s.admitted == s.done + s.expired      # reconciliation holds
+    assert member.calls == 1                     # batchmate still dispatched
+
+    # the all-expired batch never reaches a member at all
+    member2 = _Member()
+    farm2, _ = _fake_farm([member2], clock=_SteppingClock(step=0.1))
+    rid = farm2.submit("fake", _win(4), deadline_s=1.25)
+    farm2.tick(flush=True)                       # expire 1.1 < 1.25, disp 1.3
+    assert farm2.result(rid).status == EXPIRED
+    assert member2.calls == 0
+    s2 = farm2.stats()
+    assert s2.dispatches == 0 and s2.expired == 1
+    assert s2.admitted == s2.done + s2.expired
 
 
 def test_farm_overflow_and_deadline_end_to_end():
@@ -441,6 +548,51 @@ def test_protocol_routes_warmup_into_measure():
 # --------------------------------------------------------------------------- #
 # sharding: bit-exact on 1 device, real split in a forced-device subprocess
 # --------------------------------------------------------------------------- #
+
+
+def test_program_lru_shared_and_thread_safe(lstm_exe):
+    # regression: shard.py re-implemented the compiled-program LRU without
+    # the lock PR 7 added to the emulator — both must now share the one
+    # locked ProgramLRU helper, and it must stay consistent under the
+    # farm's concurrent dispatch pattern.
+    import threading
+
+    from repro.rtl.program_cache import ProgramLRU
+    from repro.serving import ShardedExecutable, make_serving_mesh
+
+    sharded = ShardedExecutable(dataclasses.replace(lstm_exe),
+                                make_serving_mesh(1))
+    assert isinstance(sharded._programs, ProgramLRU)
+    assert isinstance(lstm_exe.emulator._programs, ProgramLRU)
+
+    lru = ProgramLRU(max_programs=2)
+    built = []
+    errors = []
+
+    def hammer(tid):
+        try:
+            for i in range(200):
+                key = ("k", i % 3)
+
+                def factory(key=key):
+                    built.append(key)
+                    return key
+
+                prog, _hit, _ev = lru.get_or_build(key, factory)
+                assert prog == key          # never another key's program
+        except Exception as e:              # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    st = lru.stats()
+    assert st["hits"] + st["misses"] == 4 * 200
+    assert st["misses"] == len(built)       # every miss built exactly once
+    assert st["size"] <= 2                  # eviction bound respected
 
 
 def test_sharded_executable_bit_exact_single_device(lstm_exe):
